@@ -1,0 +1,28 @@
+"""Shared benchmark plumbing: timing + the run.py CSV contract
+(``name,us_per_call,derived``)."""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Any, Callable, Dict, List
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results"
+
+
+def timed(fn: Callable[[], Any]) -> tuple:
+    t0 = time.monotonic()
+    out = fn()
+    return out, (time.monotonic() - t0) * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: Dict[str, Any]):
+    """One CSV row per paper table/figure."""
+    print(f"{name},{us_per_call:.1f},{json.dumps(derived, sort_keys=True)}")
+
+
+def save_json(rel: str, obj: Any):
+    p = RESULTS / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(json.dumps(obj, indent=1, default=str))
+    return p

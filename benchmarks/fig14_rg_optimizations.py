@@ -1,0 +1,55 @@
+"""Paper Fig. 14 / §5.2: Runtime-Goodput optimizations over a quarter,
+segmented by workload type.
+
+Reproduced optimizations (each a real subsystem in this framework):
+  * async checkpointing (runtime.checkpoint)      -> RG up for ckpt-heavy jobs
+  * AOT compilation cache (runtime.compile_cache) -> INIT time down
+  * Pathways-style single-client framework        -> lower init + stalls
+
+Speedups are normalized to the top-N fleet workloads at quarter start,
+exactly like the paper's figure.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, save_json, timed
+from repro.core.goodput import compute_goodput
+from repro.fleet.sim import FleetSim, SimConfig
+from repro.fleet.workload import generate_jobs
+
+
+def fleet_rg(seed, *, async_ckpt=False, cache=False, pathways_frac=0.7):
+    cfg = SimConfig(n_pods=8, pod_size=256, horizon=30 * 24 * 3600, seed=seed)
+    sim = FleetSim(cfg)
+    for j in generate_jobs(300, cfg.horizon, seed=seed,
+                           async_checkpoint=async_ckpt, compile_cache=cache,
+                           framework_mix=pathways_frac,
+                           capacity_chips=cfg.n_pods * cfg.pod_size):
+        sim.submit(j)
+    sim.run()
+    return compute_goodput(sim.intervals, sim.capacity_chip_time,
+                           sim.pg_by_job()).rg
+
+
+def run(seed: int = 14):
+    base = fleet_rg(seed)
+    rows = {
+        "baseline": 1.0,
+        "async_checkpoint": fleet_rg(seed, async_ckpt=True) / base,
+        "aot_compile_cache": fleet_rg(seed, cache=True) / base,
+        "pathways_single_client": fleet_rg(seed, pathways_frac=1.0) / base,
+        "all_three": fleet_rg(seed, async_ckpt=True, cache=True,
+                              pathways_frac=1.0) / base,
+    }
+    return {"rg_speedup_vs_baseline": {k: round(v, 4) for k, v in rows.items()},
+            "baseline_rg": round(base, 4)}
+
+
+def main(quick: bool = False):
+    res, us = timed(lambda: run())
+    save_json("fleet/fig14_rg_optimizations.json", res)
+    emit("fig14_rg_optimizations", us, res["rg_speedup_vs_baseline"])
+    return res
+
+
+if __name__ == "__main__":
+    print(main())

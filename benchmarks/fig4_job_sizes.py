@@ -1,0 +1,51 @@
+"""Paper Fig. 4: fleet allocation share by topology size over one year —
+the XL share grows as large models take over, stressing the scheduler."""
+from __future__ import annotations
+
+from collections import defaultdict
+
+from benchmarks.common import emit, save_json, timed
+from repro.fleet.sim import FleetSim, SimConfig
+from repro.fleet.workload import (SIZE_MIX_EARLY, SIZE_MIX_LATE,
+                                  generate_jobs)
+
+
+def _mix_at(frac: float):
+    return {k: SIZE_MIX_EARLY[k] + frac * (SIZE_MIX_LATE[k] - SIZE_MIX_EARLY[k])
+            for k in SIZE_MIX_EARLY}
+
+
+def run(snapshots: int = 4, seed: int = 4):
+    out = []
+    for i in range(snapshots):
+        mix = _mix_at(i / max(snapshots - 1, 1))
+        cfg = SimConfig(n_pods=8, pod_size=256, horizon=14 * 24 * 3600,
+                        seed=seed + i)
+        sim = FleetSim(cfg)
+        for j in generate_jobs(250, cfg.horizon, seed=seed + i,
+                               size_mix=mix,
+                               capacity_chips=cfg.n_pods * cfg.pod_size):
+            sim.submit(j)
+        sim.run()
+        share = defaultdict(float)
+        for iv in sim.intervals:
+            if iv.phase.value != "queued":
+                share[iv.segment["size_class"]] += iv.chip_time
+        total = sum(share.values()) or 1.0
+        out.append({k: round(v / total, 4) for k, v in sorted(share.items())})
+    return {"allocation_share_by_quarter": out}
+
+
+def main(quick: bool = False):
+    res, us = timed(lambda: run(2 if quick else 4))
+    save_json("fleet/fig4_job_sizes.json", res)
+    q = res["allocation_share_by_quarter"]
+    derived = {"xl_share_first": q[0].get("xl", 0),
+               "xl_share_last": q[-1].get("xl", 0),
+               "xl_growing": q[-1].get("xl", 0) > q[0].get("xl", 0)}
+    emit("fig4_job_sizes", us, derived)
+    return res
+
+
+if __name__ == "__main__":
+    print(main())

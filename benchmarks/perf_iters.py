@@ -1,0 +1,122 @@
+"""§Perf hillclimbing driver: hypothesis -> change -> re-lower -> re-analyse.
+
+For a chosen (arch x shape) cell and a list of named variants
+(repro.launch.variants), runs the 256-chip dry-run in a subprocess (fresh
+process so --xla_force_host_platform_device_count applies), recomputes the
+cost reference for the modified config, and appends the roofline terms to
+results/perf/<arch>__<shape>.json — the before/after evidence for
+EXPERIMENTS.md §Perf.
+
+    PYTHONPATH=src python -m benchmarks.perf_iters \
+        --cell mixtral-8x7b:train_4k --variants baseline,moe_shard_map
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+from benchmarks.common import RESULTS, emit, save_json
+from repro.configs import get_config
+from repro.core.costref import cost_reference
+from repro.core.flops import model_flops
+from repro.core.roofline import make_cell
+from repro.launch.variants import apply_variant
+from repro.models.config import SHAPES_BY_NAME
+
+
+def attention_probs_traffic(cfg, shape) -> float:
+    """HBM bytes the XLA chunked-attention path spends on score/prob tiles —
+    the traffic a fused Pallas flash kernel keeps in VMEM.  fwd + remat-fwd
+    + bwd ~ 3 passes; scores fp32 + probs, ~2 tensors per pass."""
+    if cfg.family == "ssm":
+        return 0.0
+    n_attn = sum(1 for i in range(cfg.num_layers) if cfg.is_attention_layer(i))
+    if shape.kind == "decode":
+        s_rows, s_cols = 1, min(shape.seq_len,
+                                cfg.attention_window or shape.seq_len)
+        passes = 1.0
+    else:
+        s_rows = shape.seq_len
+        s_cols = (min(shape.seq_len, cfg.attention_window + cfg.attn_chunk)
+                  if cfg.attention_window else shape.seq_len)
+        passes = 3.0 if (cfg.remat and shape.kind == "train") else 1.0
+    per_layer = (shape.global_batch * cfg.num_heads * s_rows * s_cols
+                 * (4 + 2))      # fp32 scores + bf16 probs
+    return n_attn * per_layer * passes
+
+
+def run_variant(arch: str, shape_name: str, variant: str,
+                skip_dryrun: bool = False) -> dict:
+    shape = SHAPES_BY_NAME[shape_name]
+    cfg = apply_variant(get_config(arch), variant)
+
+    suffix = "" if variant == "baseline" else f"__{variant}"
+    dr_path = (RESULTS / "dryrun" / f"{arch}__{shape_name}__16x16{suffix}.json")
+    if not dr_path.exists() and not skip_dryrun:
+        env = dict(os.environ)
+        env.pop("XLA_FLAGS", None)
+        subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+             "--shape", shape_name, "--single-pod-only",
+             "--variant", variant],
+            env=env, check=True, timeout=3600,
+            cwd=str(pathlib.Path(__file__).resolve().parents[1]))
+    rec = json.loads(dr_path.read_text())
+
+    # cost reference: microbatching and the shard_map MoE dispatch don't
+    # change single-device model FLOPs — normalize so the cache hits the
+    # baseline reference compile
+    ref_cfg = dataclasses.replace(cfg, microbatches=1, moe_impl="gspmd",
+                                  bf16_grad_reduce=False)
+    ref = cost_reference(ref_cfg, shape)
+
+    cell = make_cell(cfg, shape, "16x16", rec["chips"],
+                     hlo_flops=ref["flops"], hlo_bytes=ref["bytes"],
+                     collective_bytes_per_chip=rec["collectives"]["total_bytes"])
+    row = cell.row()
+    row["variant"] = variant
+    mem = rec["memory"]
+    row["peak_gib"] = round(((mem["argument_bytes"] or 0)
+                             + (mem["temp_bytes"] or 0)) / 2**30, 2)
+    row["fits_hbm"] = row["peak_gib"] * 2**30 <= mem["hbm_per_chip"]
+    # flash-kernel memory model: probs tiles stay in VMEM on TPU
+    flash_bytes = max(ref["bytes"] - attention_probs_traffic(cfg, shape), 0.0)
+    row["t_memory_flash_s"] = flash_bytes / (rec["chips"] * 819e9)
+    row["top_collectives"] = rec.get("top_collectives", [])[:3]
+    return row
+
+
+def main(quick: bool = False, cell: str = None, variants: str = None):
+    if not cell:
+        return None   # driven explicitly via CLI during §Perf
+    arch, shape_name = cell.split(":")
+    rows = []
+    for v in (variants or "baseline").split(","):
+        row = run_variant(arch, shape_name, v.strip())
+        rows.append(row)
+        dom = row["dominant"]
+        print(f"{arch} {shape_name} {v:24s} "
+              f"t_comp={row['t_compute_s']*1e3:8.2f}ms "
+              f"t_mem={row['t_memory_s']*1e3:8.2f}ms "
+              f"t_coll={row['t_collective_s']*1e3:8.2f}ms "
+              f"dom={dom:10s} peak={row['peak_gib']:6.2f}GiB "
+              f"{'FITS' if row['fits_hbm'] else 'OVER'}")
+    out_path = RESULTS / "perf" / f"{arch}__{shape_name}.json"
+    existing = json.loads(out_path.read_text()) if out_path.exists() else []
+    names = {r["variant"] for r in rows}
+    existing = [r for r in existing if r.get("variant") not in names]
+    save_json(f"perf/{arch}__{shape_name}.json", existing + rows)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True)
+    ap.add_argument("--variants", default="baseline")
+    a = ap.parse_args()
+    main(cell=a.cell, variants=a.variants)

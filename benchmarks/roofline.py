@@ -1,0 +1,94 @@
+"""Deliverable (g): per-(arch x shape x mesh) three-term roofline table.
+
+Inputs:
+  results/dryrun/*.json   — sharded-compile memory + collective traffic
+  results/costref/*.json  — single-device cost-reference (flops/bytes),
+                            computed on demand (cached).
+
+Output: results/roofline/table.json + a printed markdown table; the fleet
+workload generator seeds per-arch PG from this file.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from benchmarks.common import RESULTS, emit, save_json, timed
+from repro.configs import ARCH_IDS, get_config
+from repro.core.costref import cost_reference
+from repro.core.roofline import make_cell
+from repro.models.config import SHAPES, SHAPES_BY_NAME, shape_applicable
+
+DRYRUN = RESULTS / "dryrun"
+
+
+def build_table(mesh: str = "16x16", archs=None, quick=False):
+    rows = []
+    for arch in (archs or ARCH_IDS):
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            ok, _ = shape_applicable(cfg, shape)
+            if not ok:
+                continue
+            dr = DRYRUN / f"{arch}__{shape.name}__{mesh}.json"
+            if not dr.exists():
+                continue
+            rec = json.loads(dr.read_text())
+            ref = cost_reference(cfg, shape)
+            cell = make_cell(
+                cfg, shape, mesh, rec["chips"],
+                hlo_flops=ref["flops"], hlo_bytes=ref["bytes"],
+                collective_bytes_per_chip=rec["collectives"]["total_bytes"])
+            row = cell.row()
+            row["fits_hbm"] = (
+                (rec["memory"]["argument_bytes"] or 0)
+                + (rec["memory"]["temp_bytes"] or 0)
+                <= rec["memory"]["hbm_per_chip"])
+            row["peak_gib"] = round(
+                ((rec["memory"]["argument_bytes"] or 0)
+                 + (rec["memory"]["temp_bytes"] or 0)) / 2**30, 2)
+            rows.append(row)
+    return rows
+
+
+def render_markdown(rows) -> str:
+    hdr = ("| arch | shape | chips | t_comp (ms) | t_mem (ms) | t_coll (ms) "
+           "| dominant | useful | PG(overlap) | fits |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['chips']} "
+            f"| {r['t_compute_s']*1e3:9.2f} | {r['t_memory_s']*1e3:9.2f} "
+            f"| {r['t_collective_s']*1e3:9.2f} | {r['dominant']:10s} "
+            f"| {r['useful_ratio']:.2f} | {r['pg_overlap']:.3f} "
+            f"| {'Y' if r['fits_hbm'] else 'OVER'} |")
+    return "\n".join(lines)
+
+
+def main(quick: bool = False):
+    def run():
+        rows = build_table("16x16",
+                           archs=["smollm-135m"] if quick else None,
+                           quick=quick)
+        save_json("roofline/table.json", rows)
+        (RESULTS / "roofline" / "table.md").write_text(render_markdown(rows))
+        return rows
+
+    rows, us = timed(run)
+    derived = {"cells": len(rows),
+               "dominant_counts": {}}
+    for r in rows:
+        derived["dominant_counts"][r["dominant"]] = \
+            derived["dominant_counts"].get(r["dominant"], 0) + 1
+    emit("roofline_table", us, derived)
+    if rows:
+        print(render_markdown(rows))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    main(ap.parse_args().quick)

@@ -1,0 +1,54 @@
+"""Benchmark harness entry point (deliverable d).
+
+One function per paper table/figure; prints ``name,us_per_call,derived``
+CSV rows.  ``python -m benchmarks.run`` runs the fleet-scale benches in
+quick mode; pass --full for the paper-scale populations and the roofline
+table (requires the dry-run artifacts; see repro.launch.dryrun).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (fig4_job_sizes, fig12_pg_compiler,
+                        fig14_rg_optimizations, fig15_rg_phases,
+                        fig16_sg_by_size, overlap_speedup, roofline,
+                        table2_mpg_composition)
+
+BENCHES = [
+    ("fig4_job_sizes", fig4_job_sizes.main),
+    ("fig12_pg_compiler", fig12_pg_compiler.main),
+    ("fig14_rg_optimizations", fig14_rg_optimizations.main),
+    ("fig15_rg_phases", fig15_rg_phases.main),
+    ("fig16_sg_by_size", fig16_sg_by_size.main),
+    ("table2_mpg_composition", table2_mpg_composition.main),
+    ("overlap_speedup", overlap_speedup.main),
+    ("roofline_table", roofline.main),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale populations (slower)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        try:
+            fn(quick=not args.full)
+        except Exception as e:  # noqa: BLE001 - report and continue
+            failures += 1
+            print(f'{name},-1,"ERROR: {type(e).__name__}: {e}"')
+            traceback.print_exc(limit=2, file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

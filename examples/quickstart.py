@@ -1,0 +1,33 @@
+"""Quickstart: train a reduced SmolLM on CPU with full MPG instrumentation.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import tempfile
+
+from repro.configs import get_smoke
+from repro.core.goodput import compute_goodput, rg_breakdown
+from repro.runtime.orchestrator import Orchestrator, RunConfig
+
+
+def main():
+    cfg = get_smoke("smollm-135m")
+    run = RunConfig(steps=40, batch=8, seq=64, checkpoint_every=10,
+                    async_checkpoint=True,
+                    ckpt_dir=tempfile.mkdtemp(prefix="quickstart_"))
+    orc = Orchestrator(cfg, run)
+    out = orc.run()
+
+    print(f"trained steps {out['start_step']}..{out['end_step']}  "
+          f"loss {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f}")
+    total = sum(i.chip_time for i in orc.intervals)
+    rep = compute_goodput(orc.intervals, total)
+    print(f"Runtime Goodput: {rep.rg:.3f}")
+    for phase, frac in rg_breakdown(orc.intervals).items():
+        print(f"  {phase:12s} {frac*100:5.1f}%")
+    print(f"async-checkpoint device pause: "
+          f"{out['ckpt_metrics']['device_pause_s']*1e3:.1f} ms total "
+          f"(writes took {out['ckpt_metrics']['write_s']*1e3:.1f} ms off-path)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Batched serving demo: prefill + continuous decode with a ring-buffer KV
+cache on a reduced Mixtral (MoE + sliding-window attention).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+from repro.launch import serve
+
+
+def main():
+    serve.main(["--arch", "mixtral-8x7b", "--smoke", "--requests", "8",
+                "--batch", "4", "--prompt-len", "24", "--max-new", "8"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Architecture registry: one module per assigned architecture.
+
+    get_config(arch_id)   -> full published ModelConfig
+    get_smoke(arch_id)    -> reduced same-family config for CPU smoke tests
+    ARCH_IDS              -> all ten assigned architecture ids
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = (
+    "mixtral-8x7b",
+    "deepseek-moe-16b",
+    "recurrentgemma-2b",
+    "smollm-135m",
+    "qwen2.5-14b",
+    "qwen2-72b",
+    "granite-3-8b",
+    "rwkv6-3b",
+    "llava-next-mistral-7b",
+    "whisper-medium",
+)
+
+_MOD = {a: a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+
+def _module(arch_id: str):
+    if arch_id not in _MOD:
+        raise KeyError(f"unknown arch '{arch_id}'; known: {sorted(_MOD)}")
+    return importlib.import_module(f"repro.configs.{_MOD[arch_id]}")
+
+
+def get_config(arch_id: str):
+    return _module(arch_id).CONFIG
+
+
+def get_smoke(arch_id: str):
+    return _module(arch_id).SMOKE

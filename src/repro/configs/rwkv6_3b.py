@@ -1,0 +1,25 @@
+"""RWKV-6 (Finch) 3B [arXiv:2404.05892; hf]: 32L d2560, attention-free,
+d_ff=8960 channel-mix, vocab 65536; data-dependent per-channel decay.
+
+Attention-free (constant-size wkv state) => ALL shapes incl. long_500k RUN.
+"""
+import dataclasses
+import jax.numpy as jnp
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-3b",
+    family="ssm",
+    num_layers=32,
+    d_model=2560,
+    num_heads=1,           # unused (attention-free)
+    num_kv_heads=1,
+    d_ff=8960,
+    vocab_size=65536,
+    rwkv_head_dim=64,      # 40 wkv heads
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, num_layers=3, d_model=64, d_ff=128, vocab_size=128,
+    rwkv_head_dim=16, compute_dtype=jnp.float32,
+)

@@ -1,0 +1,36 @@
+"""Whisper-medium [arXiv:2212.04356]: enc-dec, 24+24L d1024 16H (MHA kv=16)
+d_ff=4096, vocab 51865; conv audio frontend STUBBED (input_specs provides
+precomputed frame embeddings (b, 1500, d)).  Decoder positions extended to
+32768 for the decode_32k backbone exercise (DESIGN.md §5).
+
+Enc-dec with full attention => long_500k SKIPPED; decode shapes RUN
+(decoder KV cache + cross-attention to 1500 encoder states).
+"""
+import dataclasses
+import jax.numpy as jnp
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    family="encdec",
+    num_layers=24,          # decoder layers
+    encoder_layers=24,
+    encoder_positions=1500,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=51865,
+    norm_type="layernorm",
+    mlp_activation="gelu",
+    mlp_gated=False,
+    tie_embeddings=True,
+    qkv_bias=True,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, num_layers=2, encoder_layers=2, encoder_positions=24, d_model=64,
+    num_heads=4, num_kv_heads=4, head_dim=16, d_ff=128, vocab_size=128,
+    attn_chunk=8, compute_dtype=jnp.float32,
+)

@@ -1,0 +1,129 @@
+"""ML Productivity Goodput (paper §4): the metric itself.
+
+    MPG = Scheduling Goodput x Runtime Goodput x Program Goodput
+
+    SG = all-allocated chip-time          / fleet capacity chip-time
+    RG = checkpointed productive chip-time / all-allocated chip-time
+    PG = ideal (compute-roofline) time    / actual execution time
+
+The accounting is event-based: jobs emit intervals tagged with a phase
+(the paper's Figure 5/11 timeline) and the metric is computed by summing
+chip-time per phase.  Work done between the last checkpoint and a failure
+or preemption is NOT productive (paper §4.3, Runtime Goodput definition).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from collections import defaultdict
+from typing import Dict, Iterable, List, Optional, Tuple
+
+
+class Phase(enum.Enum):
+    """What a job's chips were doing during an interval."""
+    QUEUED = "queued"                # waiting for all-allocation (counts against SG)
+    PARTIAL = "partial"              # some but not all chips allocated (SG loss)
+    INIT = "init"                    # program load/compile/connect (RG loss)
+    STEP = "step"                    # productive compute (subject to checkpoint survival)
+    CHECKPOINT = "checkpoint"        # synchronous checkpoint write (RG loss)
+    DATA_STALL = "data_stall"        # input-pipeline stall (RG loss)
+    LOST = "lost"                    # rolled-back work after failure/preemption
+    IDLE = "idle"                    # allocated but idle (RG loss)
+
+
+@dataclasses.dataclass(frozen=True)
+class Interval:
+    """A [t0, t1) span of one job on `chips` chips."""
+    job_id: str
+    phase: Phase
+    t0: float
+    t1: float
+    chips: int
+    segment: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+    @property
+    def chip_time(self) -> float:
+        return max(0.0, self.t1 - self.t0) * self.chips
+
+
+ALLOCATED_PHASES = {Phase.INIT, Phase.STEP, Phase.CHECKPOINT,
+                    Phase.DATA_STALL, Phase.LOST, Phase.IDLE}
+PRODUCTIVE_PHASES = {Phase.STEP}
+
+
+@dataclasses.dataclass
+class GoodputReport:
+    sg: float
+    rg: float
+    pg: float
+    capacity_chip_time: float
+    allocated_chip_time: float
+    productive_chip_time: float
+    ideal_chip_time: float
+
+    @property
+    def mpg(self) -> float:
+        return self.sg * self.rg * self.pg
+
+    def as_dict(self) -> Dict[str, float]:
+        return {"SG": self.sg, "RG": self.rg, "PG": self.pg, "MPG": self.mpg}
+
+
+def compute_goodput(intervals: Iterable[Interval],
+                    capacity_chip_time: float,
+                    pg_by_job: Optional[Dict[str, float]] = None
+                    ) -> GoodputReport:
+    """Compose MPG from an interval log.
+
+    ``pg_by_job`` maps job -> Program Goodput (ideal/actual step time, from
+    the roofline model or measured step times); productive chip-time is
+    weighted by it to yield the fleet PG.
+    """
+    allocated = 0.0
+    productive = 0.0
+    ideal = 0.0
+    for iv in intervals:
+        if iv.phase in ALLOCATED_PHASES:
+            allocated += iv.chip_time
+        if iv.phase in PRODUCTIVE_PHASES:
+            productive += iv.chip_time
+            ideal += iv.chip_time * (pg_by_job or {}).get(iv.job_id, 1.0)
+    sg = allocated / capacity_chip_time if capacity_chip_time else 0.0
+    rg = productive / allocated if allocated else 0.0
+    pg = ideal / productive if productive else 0.0
+    return GoodputReport(sg=sg, rg=rg, pg=pg,
+                         capacity_chip_time=capacity_chip_time,
+                         allocated_chip_time=allocated,
+                         productive_chip_time=productive,
+                         ideal_chip_time=ideal)
+
+
+# ---------------------------------------------------------------------------
+# Segmentation (paper §5: disaggregate to find bottlenecks; avoids
+# Simpson's-paradox traps by keeping per-segment denominators)
+# ---------------------------------------------------------------------------
+
+def segment_goodput(intervals: Iterable[Interval],
+                    key: str,
+                    capacity_by_segment: Dict[str, float],
+                    pg_by_job: Optional[Dict[str, float]] = None
+                    ) -> Dict[str, GoodputReport]:
+    """Per-segment MPG, segmenting on an interval tag (e.g. 'phase_kind',
+    'arch', 'size_class', 'framework', 'chip')."""
+    buckets: Dict[str, List[Interval]] = defaultdict(list)
+    for iv in intervals:
+        buckets[iv.segment.get(key, "unknown")].append(iv)
+    return {
+        seg: compute_goodput(ivs, capacity_by_segment.get(seg, 0.0), pg_by_job)
+        for seg, ivs in sorted(buckets.items())
+    }
+
+
+def rg_breakdown(intervals: Iterable[Interval]) -> Dict[str, float]:
+    """Where allocated-but-unproductive chip-time goes (paper Fig. 10)."""
+    out: Dict[str, float] = defaultdict(float)
+    for iv in intervals:
+        if iv.phase in ALLOCATED_PHASES:
+            out[iv.phase.value] += iv.chip_time
+    total = sum(out.values()) or 1.0
+    return {k: v / total for k, v in sorted(out.items())}

@@ -1,0 +1,35 @@
+"""Target-hardware constants (TPU v5e) for roofline terms and the fleet
+simulator's analytical step-time model."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    peak_flops_bf16: float      # FLOP/s per chip
+    hbm_bw: float               # bytes/s
+    hbm_bytes: float            # capacity
+    ici_link_bw: float          # bytes/s per link (one direction)
+    ici_links: int              # links per chip in a 2D torus
+
+
+TPU_V5E = ChipSpec(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,
+    hbm_bw=819e9,
+    hbm_bytes=16 * 1024 ** 3,
+    ici_link_bw=50e9,
+    ici_links=4,
+)
+
+# Cross-pod (DCN) bandwidth per chip — used by the fleet simulator for
+# multi-pod gradient all-reduces (pod axis).
+DCN_BW_PER_CHIP = 6.25e9  # bytes/s
+
+
+def ideal_step_time(model_flops: float, chips: int,
+                    chip: ChipSpec = TPU_V5E) -> float:
+    """The paper's Program-Goodput numerator: intrinsic FLOPs at peak."""
+    return model_flops / (chips * chip.peak_flops_bf16)

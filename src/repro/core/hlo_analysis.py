@@ -1,0 +1,218 @@
+"""Post-compile HLO analysis: collective-traffic accounting with while-loop
+trip-count multiplication.
+
+``compiled.cost_analysis()`` counts while bodies ONCE (verified empirically
+— see EXPERIMENTS.md §Dry-run notes), so collective bytes inside a
+``lax.scan`` over layers would be undercounted by ~L.  This parser walks the
+optimized HLO module text, finds every collective op, and multiplies by the
+product of enclosing while trip counts (recovered from the loop condition's
+comparison constant — exact for scan-lowered loops).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(
+    r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\(.*\))?\s*->.*{\s*$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\)\s*,\s*condition=%?([\w\.\-]+)\s*,\s*body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"=\s*s32\[\]\s*constant\((\d+)\)")
+_CALL_RE = re.compile(r"(?:to_apply|called_computations=\{)=?%?([\w\.\-]+)")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Bytes of one 'f32[128,256]' (or tuple '(f32[..], bf16[..])') string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, float]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m and "{" in line:
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        if line.strip().startswith("}"):
+            cur = None
+            continue
+        comps[cur].append(line)
+    return comps
+
+
+def _entry_name(hlo: str, comps) -> str:
+    m = re.search(r"ENTRY\s+%?([\w\.\-]+)", hlo)
+    if m and m.group(1) in comps:
+        return m.group(1)
+    # fallback: computation named main.*
+    for name in comps:
+        if name.startswith("main"):
+            return name
+    return next(iter(comps))
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Largest integer constant in the loop condition (exact for scan)."""
+    best = 1
+    for ln in cond_lines:
+        for c in _CONST_RE.findall(ln):
+            best = max(best, int(c))
+    return best
+
+
+def _op_kind(line: str):
+    for kind in COLLECTIVE_KINDS:
+        token = f" {kind}("
+        start_token = f" {kind}-start("
+        if token in line:
+            return kind
+        if start_token in line:
+            return kind
+    return None
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)           # iota form: [n_groups, group_size]
+    if m:
+        return max(1, int(m.group(2)))
+    m = _GROUPS_BRACE_RE.search(line)     # explicit form: {{0,1},{2,3},...}
+    if m:
+        return max(1, len(m.group(1).split(",")))
+    return 1
+
+
+def _operand_bytes(line: str, kind: str) -> float:
+    """Operand bytes of a collective op, recovered from its RESULT shape.
+
+    Scheduled HLO prints operands without types, so we use the result shape:
+      all-reduce / all-to-all / collective-permute: operand == result;
+      all-gather: operand = result / group_size;
+      reduce-scatter: operand (full input) = result * group_size.
+    """
+    m = re.search(rf"=\s*(.*?)\s{re.escape(kind)}(?:-start)?\(", line)
+    if not m:
+        return 0.0
+    result = shape_bytes(m.group(1))
+    g = _group_size(line)
+    if kind == "all-gather":
+        return result / g
+    if kind == "reduce-scatter":
+        return result * g
+    return float(result)
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    comps = _split_computations(hlo_text)
+    entry = _entry_name(hlo_text, comps)
+    bytes_by_kind: Dict[str, float] = defaultdict(float)
+    count_by_kind: Dict[str, int] = defaultdict(int)
+    visiting = set()
+
+    def walk(name: str, mult: float):
+        if name not in comps or name in visiting:
+            return
+        visiting.add(name)
+        for line in comps[name]:
+            kind = _op_kind(line)
+            if kind and "-done(" not in line:
+                bytes_by_kind[kind] += mult * _operand_bytes(line, kind)
+                count_by_kind[kind] += 1
+            m = _WHILE_RE.search(line)
+            if m:
+                cond, body = m.group(1), m.group(2)
+                trips = _trip_count(comps.get(cond, []))
+                walk(body, mult * trips)
+                continue
+            # conditionals / calls (not collectives' to_apply reducers)
+            if " call(" in line or "conditional(" in line:
+                for callee in re.findall(r"(?:to_apply|branch_computations=\{[^}]*)=?%?([\w\.\-]+)", line):
+                    walk(callee, mult)
+        visiting.discard(name)
+
+    walk(entry, 1.0)
+    return CollectiveStats(dict(bytes_by_kind), dict(count_by_kind))
+
+
+def top_collectives(hlo_text: str, n: int = 10) -> List[dict]:
+    """The n largest collectives by bytes x enclosing-loop trips — the
+    hillclimb targeting tool (what should I shrink first?)."""
+    comps = _split_computations(hlo_text)
+    entry = _entry_name(hlo_text, comps)
+    out: List[dict] = []
+    visiting = set()
+
+    def walk(name: str, mult: float):
+        if name not in comps or name in visiting:
+            return
+        visiting.add(name)
+        for line in comps[name]:
+            kind = _op_kind(line)
+            if kind and "-done(" not in line:
+                b = _operand_bytes(line, kind)
+                meta = re.search(r'op_name="([^"]+)"', line)
+                out.append({
+                    "kind": kind,
+                    "bytes_once": b,
+                    "trips": mult,
+                    "bytes_total": b * mult,
+                    "op_name": meta.group(1)[-120:] if meta else "?",
+                })
+            m = _WHILE_RE.search(line)
+            if m:
+                walk(m.group(2), mult * _trip_count(comps.get(m.group(1), [])))
+        visiting.discard(name)
+
+    walk(entry, 1.0)
+    out.sort(key=lambda r: -r["bytes_total"])
+    return out[:n]
+
+
+def while_trip_counts(hlo_text: str) -> List[Tuple[str, int]]:
+    comps = _split_computations(hlo_text)
+    out = []
+    for name, lines in comps.items():
+        for line in lines:
+            m = _WHILE_RE.search(line)
+            if m:
+                out.append((m.group(2), _trip_count(comps.get(m.group(1), []))))
+    return out

@@ -1,0 +1,119 @@
+"""Three-term roofline analysis from compiled dry-run artifacts (deliverable g).
+
+    compute term    = HLO_FLOPs   / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes   / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+HLO_FLOPs/bytes come from a *cost-reference compile* (single device,
+loops unrolled) because ``cost_analysis()`` counts while bodies once
+(verified empirically; see EXPERIMENTS.md §Dry-run).  Costs that exceed
+feasible reference sizes are recovered by exact polynomial extrapolation in
+batch/seq (matmul cost is linear in batch, attention quadratic in seq — a
+degree-2 fit is exact, not an approximation).  Collective bytes come from
+the SPMD-partitioned HLO of the real 256/512-chip compile, with while-loop
+trip-count multiplication (repro.core.hlo_analysis); the parsed program is
+per-device, so the chips factor cancels:  t_coll = parsed_bytes / link_bw.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.core.hardware import ChipSpec, TPU_V5E
+from repro.core.flops import model_flops
+from repro.models.config import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass
+class RooflineCell:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float           # total, all chips
+    hlo_bytes: float           # total, all chips
+    collective_bytes_per_chip: float
+    model_flops: float
+    chip: ChipSpec = TPU_V5E
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * self.chip.peak_flops_bf16)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * self.chip.hbm_bw)
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_chip / self.chip.ici_link_bw
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_ideal(self) -> float:
+        """Paper PG numerator: MODEL_FLOPS at peak."""
+        return self.model_flops / (self.chips * self.chip.peak_flops_bf16)
+
+    @property
+    def t_lower_bound(self) -> float:
+        """Best case: perfect compute/memory/collective overlap."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def t_no_overlap(self) -> float:
+        return self.t_compute + self.t_memory + self.t_collective
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs: fraction of compiled compute that is
+        'useful' (catches remat recompute, masked-attention waste, dispatch
+        overhead)."""
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def pg_optimistic(self) -> float:
+        return self.t_ideal / self.t_lower_bound if self.t_lower_bound else 0.0
+
+    @property
+    def pg_pessimistic(self) -> float:
+        return self.t_ideal / self.t_no_overlap if self.t_no_overlap else 0.0
+
+    def row(self) -> Dict[str, object]:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "hlo_flops": self.hlo_flops,
+            "useful_ratio": self.useful_ratio,
+            "pg_overlap": self.pg_optimistic,
+            "pg_no_overlap": self.pg_pessimistic,
+        }
+
+
+def make_cell(cfg: ModelConfig, shape: ShapeConfig, mesh_name: str,
+              chips: int, hlo_flops: float, hlo_bytes: float,
+              collective_bytes_per_chip: float) -> RooflineCell:
+    return RooflineCell(
+        arch=cfg.name, shape=shape.name, mesh=mesh_name, chips=chips,
+        hlo_flops=hlo_flops, hlo_bytes=hlo_bytes,
+        collective_bytes_per_chip=collective_bytes_per_chip,
+        model_flops=model_flops(cfg, shape))
+
+
+def fit_poly_and_eval(xs, ys, x_target: float, degree: int = 2) -> float:
+    """Exact polynomial cost extrapolation (costs are polynomial in
+    batch/seq by construction)."""
+    import numpy as np
+
+    degree = min(degree, len(xs) - 1)
+    coef = np.polyfit(np.asarray(xs, float), np.asarray(ys, float), degree)
+    return float(np.polyval(coef, x_target))

@@ -1,0 +1,3 @@
+from repro.fleet.cluster import Cluster  # noqa: F401
+from repro.fleet.job import JobSpec, SIZE_CLASSES  # noqa: F401
+from repro.fleet.sim import FleetSim, SimConfig  # noqa: F401

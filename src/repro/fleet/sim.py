@@ -1,0 +1,415 @@
+"""Discrete-event fleet simulator (paper §3.2 / §5.3).
+
+Event-driven: job arrivals, completions, chip failures, preemptions.
+Per-run-segment accounting is analytic (checkpoint cycles are folded into a
+productive-rate factor) so a month of fleet time with thousands of jobs
+simulates in milliseconds while emitting the exact same Interval ledger the
+MPG metric consumes.
+
+Scheduler policy (paper §5.3, Fig. 16):
+  * topology-aware best-fit placement into buddy-allocated pod slices;
+  * preemption prefers MEDIUM victims — evicting XL jobs cascades (huge
+    restart cost), and SMALL jobs finish soon anyway;
+  * defragmentation: when the queue head cannot fit due to fragmentation,
+    small movable jobs are migrated (checkpoint-resume) to coalesce slices.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+import random
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.goodput import Interval, Phase
+from repro.fleet.cluster import Cluster
+from repro.fleet.job import JobRuntime, JobSpec
+
+
+@dataclasses.dataclass
+class SimConfig:
+    n_pods: int = 8
+    pod_size: int = 256
+    horizon: float = 7 * 24 * 3600.0
+    chip_mtbf: float = 150.0 * 24 * 3600     # seconds per chip failure
+    seed: int = 0
+    xl_assembly_per_pod: float = 60.0        # PARTIAL time per extra pod
+    defrag_migration_cost: float = 45.0      # seconds to move a small job
+    preempt_protect_xl: bool = True          # paper's policy; ablatable
+    async_snapshot_pause: float = 1.5        # device pause per async ckpt
+    aging_hours: float = 6.0                 # queue aging: +1 priority / N h
+    preempt_gap: float = 1.0                 # min priority advantage to evict
+    drain_cap: int = 4                       # max migrations per event
+
+
+class FleetSim:
+    def __init__(self, cfg: SimConfig):
+        self.cfg = cfg
+        self.cluster = Cluster(cfg.n_pods, cfg.pod_size)
+        self.rng = random.Random(cfg.seed)
+        self.now = 0.0
+        self.events: List[Tuple[float, int, str, str]] = []
+        self._seq = 0
+        self.jobs: Dict[str, JobRuntime] = {}
+        self.queue: List[str] = []
+        self.running: Dict[str, dict] = {}     # job_id -> segment info
+        self.intervals: List[Interval] = []
+        self.telemetry: List[dict] = []
+        self._epoch: Dict[str, int] = defaultdict(int)
+        self._queued_since: Dict[str, float] = {}
+        # jobs whose current wait is preemption/failure-induced: that wait is
+        # PARTIAL (counts against per-class SG, paper Fig. 16) rather than
+        # initial QUEUED (a fleet-capacity matter, not a per-job one).
+        self._requeued: set = set()
+
+    # ---- event plumbing -------------------------------------------------
+    def _push(self, t: float, kind: str, payload: str):
+        self._seq += 1
+        heapq.heappush(self.events, (t, self._seq, kind, payload))
+
+    def submit(self, spec: JobSpec):
+        self.jobs[spec.job_id] = JobRuntime(spec)
+        self._push(spec.arrival, "arrival", spec.job_id)
+
+    # ---- interval ledger -------------------------------------------------
+    def _emit(self, job: JobRuntime, phase: Phase, t0: float, t1: float):
+        if t1 <= t0:
+            return
+        s = job.spec
+        self.intervals.append(Interval(
+            job_id=s.job_id, phase=phase, t0=t0, t1=t1, chips=s.chips,
+            segment={
+                "size_class": s.size_class, "phase_kind": s.phase_kind,
+                "arch": s.arch, "framework": s.framework,
+                "ckpt": "async" if s.async_checkpoint else "sync",
+            }))
+
+    # ---- productive-rate model -------------------------------------------
+    def _rates(self, s: JobSpec) -> Tuple[float, float, float]:
+        """Fractions of allocated wall time in (step, ckpt, stall)."""
+        if s.async_checkpoint:
+            ckpt_overhead = self.cfg.async_snapshot_pause / s.checkpoint_interval
+        else:
+            ckpt_overhead = s.checkpoint_write / s.checkpoint_interval
+        stall = s.effective_stall()
+        # floor: even a pathologically stalled job makes some progress
+        step = max(0.02, 1.0 - ckpt_overhead - stall)
+        stall = max(0.0, min(stall, 1.0 - step - ckpt_overhead))
+        return step, ckpt_overhead, stall
+
+    # ---- scheduling ------------------------------------------------------
+    def _eff_priority(self, job_id: str) -> float:
+        """Priority with aging: +1 level per 6h queued (starvation guard)."""
+        base = self.jobs[job_id].spec.priority
+        if job_id in self._requeued:
+            base += 1.0   # preempted/failed jobs resume ahead of new work
+        waited = self.now - self._queued_since.get(job_id, self.now)
+        return base + waited / (self.cfg.aging_hours * 3600.0)
+
+    def _drain_for_xl(self) -> tuple:
+        """When a multi-pod job queues, reserve + drain the emptiest pods
+        (the paper's defragmentation at pod granularity)."""
+        pod_size = self.cfg.pod_size
+        xl_need = max((self.jobs[j].spec.chips // pod_size
+                       for j in self.queue
+                       if self.jobs[j].spec.chips > pod_size), default=0)
+        if xl_need == 0:
+            return ()
+        # emptiest pods first (prefer already-empty: no migration needed)
+        by_emptiness = sorted(self.cluster.pods,
+                              key=lambda p: -p.free_chips())
+        drain = tuple(p.pod_id for p in by_emptiness[:xl_need])
+        migrated = 0
+        for pid in drain:
+            for job_id in list(self.cluster.pod_jobs(pid)):
+                if migrated >= self.cfg.drain_cap:  # churn cap per event
+                    break
+                v = self.jobs[job_id]
+                if v.spec.chips > 64:   # migrate only small/medium
+                    continue
+                self._stop_segment(v, lost=False)   # checkpoint-resume
+                self.cluster.release(job_id)
+                if self.cluster.alloc(job_id, v.spec.chips,
+                                      exclude=drain) is not None:
+                    v.spec = dataclasses.replace(
+                        v.spec, init_time=self.cfg.defrag_migration_cost)
+                    self._start_segment(v)
+                else:
+                    self._queued_since[job_id] = self.now
+                    self._requeued.add(job_id)
+                    self.queue.append(job_id)
+                migrated += 1
+        return drain
+
+    def _try_schedule(self):
+        self.queue.sort(key=lambda j: (-self._eff_priority(j),
+                                       self.jobs[j].spec.arrival))
+        drain = self._drain_for_xl()
+        scheduled = []
+        for job_id in list(self.queue):
+            job = self.jobs[job_id]
+            exclude = drain if job.spec.chips <= self.cfg.pod_size else ()
+            if self.cluster.alloc(job_id, job.spec.chips,
+                                  exclude=exclude) is not None:
+                scheduled.append(job_id)
+                self._start_segment(job)
+                continue
+            # elastic resume: a preempted/failed job restarts on half its
+            # slice instead of waiting for the full shape (paper §3.2's
+            # utilization/stability trade; work rate scales with chips).
+            if job_id in self._requeued and job.spec.elastic \
+                    and 2 <= job.spec.chips <= self.cfg.pod_size:
+                half = job.spec.chips // 2
+                if self.cluster.alloc(job_id, half,
+                                      exclude=exclude) is not None:
+                    job.spec = dataclasses.replace(job.spec, chips=half)
+                    scheduled.append(job_id)
+                    self._start_segment(job)
+                    continue
+            # defragmentation: migrate small jobs if that frees a slice
+            if self._defrag_for(job):
+                if self.cluster.alloc(job_id, job.spec.chips) is not None:
+                    scheduled.append(job_id)
+                    self._start_segment(job)
+                    continue
+            # preemption for high-priority arrivals
+            if self._preempt_for(job):
+                if self.cluster.alloc(job_id, job.spec.chips) is not None:
+                    scheduled.append(job_id)
+                    self._start_segment(job)
+        for j in scheduled:
+            self.queue.remove(j)
+
+    def _defrag_for(self, job: JobRuntime) -> bool:
+        """Migrate one small running job out of the most-fragmented pod."""
+        if job.spec.chips > self.cfg.pod_size:
+            return False
+        victims = [j for j, seg in self.running.items()
+                   if self.jobs[j].spec.size_class == "small"]
+        if not victims:
+            return False
+        victim = min(victims, key=lambda j: self.jobs[j].spec.chips)
+        v = self.jobs[victim]
+        self._stop_segment(v, lost=False)     # checkpoint-resume migration
+        self.cluster.release(victim)
+        # instant re-placement elsewhere (cost charged as INIT on restart)
+        if self.cluster.alloc(victim, v.spec.chips) is not None:
+            v.spec = dataclasses.replace(
+                v.spec, init_time=self.cfg.defrag_migration_cost)
+            self._start_segment(v)
+            return True
+        self._queued_since[victim] = self.now
+        self._requeued.add(victim)
+        self.queue.append(victim)
+        return True
+
+    def _preempt_for(self, job: JobRuntime) -> bool:
+        if job.spec.chips > self.cfg.pod_size:
+            return self._preempt_pods_for_xl(job)
+        return self._preempt_chips(job)
+
+    def _preempt_pods_for_xl(self, job: JobRuntime) -> bool:
+        """Whole-pod eviction for multi-pod jobs: pick the pods whose
+        occupants are all evictable and cheapest to displace."""
+        need = -(-job.spec.chips // self.cfg.pod_size)
+        eff = self._eff_priority(job.spec.job_id)
+        usable = []
+        for pod in self.cluster.pods:
+            occupants = self.cluster.pod_jobs(pod.pod_id)
+            cost = 0.0
+            ok = True
+            for j in occupants:
+                v = self.jobs[j]
+                if v.spec.chips > self.cfg.pod_size:   # another XL: protected
+                    ok = False
+                    break
+                if self.cfg.preempt_protect_xl and v.spec.priority >= eff:
+                    ok = False
+                    break
+                cost += v.spec.chips
+            if ok:
+                usable.append((cost, pod.pod_id, occupants))
+        if len(usable) < need:
+            return False
+        usable.sort()
+        for _, pid, occupants in usable[:need]:
+            for j in occupants:
+                v = self.jobs[j]
+                self._stop_segment(v, lost=True)
+                self.cluster.release(j)
+                v.preemptions += 1
+                self._queued_since[j] = self.now
+                self._requeued.add(j)
+                self.queue.append(j)
+        return True
+
+    def _preempt_chips(self, job: JobRuntime) -> bool:
+        """Evict lower-priority victims; paper policy protects XL + small."""
+        candidates = []
+        for j in self.running:
+            v = self.jobs[j]
+            if v.spec.priority > self._eff_priority(job.spec.job_id) - self.cfg.preempt_gap:
+                continue
+            # eviction churn guard: a job already evicted twice is immune
+            if v.preemptions >= 2:
+                continue
+            sc = v.spec.size_class
+            if self.cfg.preempt_protect_xl and sc == "xl":
+                continue
+            rank = {"medium": 0, "large": 1, "small": 2, "xl": 3}[sc]
+            candidates.append((rank, v.spec.chips, j))
+        if not candidates:
+            return False
+        candidates.sort()
+        freed = 0
+        for _, chips, j in candidates:
+            v = self.jobs[j]
+            self._stop_segment(v, lost=True)
+            self.cluster.release(j)
+            v.preemptions += 1
+            self._queued_since[j] = self.now
+            self._requeued.add(j)
+            self.queue.append(j)
+            freed += chips
+            if freed >= job.spec.chips:
+                return True
+        return freed >= job.spec.chips
+
+    # ---- run segments ----------------------------------------------------
+    def _start_segment(self, job: JobRuntime):
+        s = job.spec
+        t = self.now
+        q0 = self._queued_since.pop(s.job_id, None)
+        if q0 is not None and t > q0:
+            wait_phase = (Phase.PARTIAL if s.job_id in self._requeued
+                          else Phase.QUEUED)
+            self._emit(job, wait_phase, q0, t)
+        self._requeued.discard(s.job_id)
+        self._epoch[s.job_id] += 1
+        epoch = self._epoch[s.job_id]
+        if s.size_class == "xl":
+            assembly = self.cfg.xl_assembly_per_pod * (s.chips // self.cfg.pod_size)
+            self._emit(job, Phase.PARTIAL, t, t + assembly)
+            t += assembly
+        init = s.effective_init()
+        self._emit(job, Phase.INIT, t, t + init)
+        t += init
+
+        step_f, ckpt_f, stall_f = self._rates(s)
+        wall_needed = job.remaining / (s.chips * step_f)
+        end = t + wall_needed
+
+        # failure sampling over the allocated slice
+        rate = s.chips / self.cfg.chip_mtbf
+        t_fail = t + self.rng.expovariate(rate) if rate > 0 else math.inf
+
+        seg = {"t_run0": t, "epoch": epoch, "step_f": step_f,
+               "ckpt_f": ckpt_f, "stall_f": stall_f}
+        self.running[s.job_id] = seg
+        job.started = self.now
+        if t_fail < min(end, self.cfg.horizon):
+            self._push(t_fail, "failure", f"{s.job_id}:{epoch}")
+        elif end <= self.cfg.horizon:
+            self._push(end, "complete", f"{s.job_id}:{epoch}")
+        # else: runs past horizon; closed at the end of sim
+
+    def _stop_segment(self, job: JobRuntime, lost: bool):
+        """Close the running segment at self.now, crediting work."""
+        s = job.spec
+        seg = self.running.pop(s.job_id, None)
+        if seg is None:
+            return
+        t0 = seg["t_run0"]
+        dur = max(0.0, self.now - t0)
+        step_t = dur * seg["step_f"]
+        ckpt_t = dur * seg["ckpt_f"]
+        stall_t = dur * seg["stall_f"]
+        work = step_t * s.chips
+
+        # checkpoint survival: work since last checkpoint boundary is lost
+        # on failure/preemption (paper §4.3 RG definition)
+        cycles = int(step_t // s.checkpoint_interval)
+        survived = min(work, cycles * s.checkpoint_interval * s.chips)
+        if lost:
+            lost_work = work - survived
+            credited = survived
+        else:
+            lost_work = 0.0
+            credited = work
+
+        t = t0
+        good_t = credited / s.chips
+        lost_t = lost_work / s.chips
+        self._emit(job, Phase.STEP, t, t + good_t)
+        t += good_t
+        if lost_t > 0:
+            self._emit(job, Phase.LOST, t, t + lost_t)
+            t += lost_t
+        if ckpt_t > 0:
+            self._emit(job, Phase.CHECKPOINT, t, t + ckpt_t)
+            t += ckpt_t
+        if stall_t > 0:
+            self._emit(job, Phase.DATA_STALL, t, t + stall_t)
+        job.remaining = max(0.0, job.remaining - credited)
+        job.checkpointed += credited
+
+    # ---- event loop -------------------------------------------------------
+    def run(self):
+        cfg = self.cfg
+        sample_dt = cfg.horizon / 200
+        next_sample = 0.0
+        while self.events:
+            t, _, kind, payload = heapq.heappop(self.events)
+            if t > cfg.horizon:
+                break
+            while next_sample <= t:
+                self._sample(next_sample)
+                next_sample += sample_dt
+            self.now = t
+            if kind == "arrival":
+                self._queued_since[payload] = t
+                self.queue.append(payload)
+                self._try_schedule()
+            elif kind in ("complete", "failure"):
+                job_id, epoch = payload.rsplit(":", 1)
+                job = self.jobs[job_id]
+                if self._epoch[job_id] != int(epoch) \
+                        or job_id not in self.running:
+                    continue   # stale event from a preempted segment
+                if kind == "complete":
+                    self._stop_segment(job, lost=False)
+                    self.cluster.release(job_id)
+                else:
+                    job.failures += 1
+                    self._stop_segment(job, lost=True)
+                    self.cluster.release(job_id)
+                    if job.remaining > 0:
+                        self._queued_since[job_id] = t
+                        self._requeued.add(job_id)
+                        self.queue.append(job_id)
+                self._try_schedule()
+        # close still-running segments at the horizon
+        self.now = cfg.horizon
+        for job_id in list(self.running):
+            self._stop_segment(self.jobs[job_id], lost=False)
+            self.cluster.release(job_id)
+        return self
+
+    def _sample(self, t: float):
+        occupied = sum(self.jobs[j].spec.chips for j in self.running)
+        self.telemetry.append({
+            "t": t,
+            "occupied": occupied,
+            "free": self.cluster.free_chips(),
+            "queued": len(self.queue),
+            "fragmentation": self.cluster.fragmentation(),
+        })
+
+    # ---- reporting ---------------------------------------------------------
+    @property
+    def capacity_chip_time(self) -> float:
+        return self.cluster.total_chips * self.cfg.horizon
+
+    def pg_by_job(self) -> Dict[str, float]:
+        return {j: r.spec.pg for j, r in self.jobs.items()}

@@ -1,0 +1,21 @@
+"""Jitted public wrapper for the flash attention kernel (bshd layout)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention_bshd(q, k, v, *, causal=True, window=0, block_q=128,
+                         block_k=128, interpret=False):
+    """q: (b, sq, hq, d); k, v: (b, skv, hkv, d) — model-layout wrapper."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    o = flash_attention(qt, kt, vt, causal=causal, window=window,
+                        block_q=block_q, block_k=block_k, interpret=interpret)
+    return o.transpose(0, 2, 1, 3)

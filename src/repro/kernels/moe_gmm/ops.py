@@ -1,0 +1,15 @@
+"""Jitted wrapper for the grouped expert matmul kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.moe_gmm.moe_gmm import moe_gmm_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f", "block_k",
+                                             "interpret"))
+def moe_gmm(x, w, *, block_c=128, block_f=128, block_k=512, interpret=False):
+    return moe_gmm_kernel(x, w, block_c=block_c, block_f=block_f,
+                          block_k=block_k, interpret=interpret)

@@ -1,0 +1,15 @@
+"""Jitted wrapper for the RG-LRU scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rglru_scan.rglru_scan import rglru_scan_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_c",
+                                             "interpret"))
+def rglru_scan(a, b, *, block_s=256, block_c=128, interpret=False):
+    return rglru_scan_kernel(a, b, block_s=block_s, block_c=block_c,
+                             interpret=interpret)

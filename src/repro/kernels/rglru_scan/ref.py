@@ -1,0 +1,17 @@
+"""Pure-jnp oracle: associative scan of h_t = a_t h_{t-1} + b_t."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a, b):
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    _, h = jax.lax.associative_scan(combine, (af, bf), axis=1)
+    return h.astype(a.dtype)

@@ -1,0 +1,67 @@
+"""RG-LRU linear-recurrence TPU kernel: h_t = a_t * h_{t-1} + b_t.
+
+The gate matmuls stay in XLA (MXU-friendly as plain dots); the kernel owns
+the sequential recurrence, which on TPU is VPU-bound: we tile channels into
+VMEM-resident lanes and run the time loop in-register, carrying h in VMEM
+scratch across sequence-block grid steps (grid's last dim iterates
+sequentially on TPU).
+
+Block layout: a, b tiles (1, block_s, block_c); grid (batch, n_chan_blocks,
+n_seq_blocks) — channels are 128-lane aligned on real hardware.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, o_ref, h_scr, *, block_s: int):
+    isq = pl.program_id(2)
+
+    @pl.when(isq == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    a = a_ref[0].astype(jnp.float32)     # (block_s, block_c)
+    bb = b_ref[0].astype(jnp.float32)
+    h0 = h_scr[...]                      # (1, block_c)
+
+    def body(t, carry):
+        h, out = carry
+        h = a[t][None] * h + bb[t][None]
+        out = jax.lax.dynamic_update_slice_in_dim(out, h, t, axis=0)
+        return h, out
+
+    h, out = jax.lax.fori_loop(
+        0, block_s, body, (h0, jnp.zeros((block_s, a.shape[1]), jnp.float32)))
+    o_ref[0] = out.astype(o_ref.dtype)
+    h_scr[...] = h
+
+
+def rglru_scan_kernel(a, b, *, block_s: int = 256, block_c: int = 128,
+                      interpret: bool = False):
+    """a, b: (batch, seq, channels) -> scanned h (batch, seq, channels)."""
+    bs, seq, ch = a.shape
+    block_s = min(block_s, seq)
+    block_c = min(block_c, ch)
+    grid = (bs, pl.cdiv(ch, block_c), pl.cdiv(seq, block_s))
+    kernel = functools.partial(_kernel, block_s=block_s)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_s, block_c),
+                         lambda ib, ic, isq: (ib, isq, ic)),
+            pl.BlockSpec((1, block_s, block_c),
+                         lambda ib, ic, isq: (ib, isq, ic)),
+        ],
+        out_specs=pl.BlockSpec((1, block_s, block_c),
+                               lambda ib, ic, isq: (ib, isq, ic)),
+        out_shape=jax.ShapeDtypeStruct((bs, seq, ch), a.dtype),
+        scratch_shapes=[pltpu.VMEM((1, block_c), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,14 @@
+"""Jitted wrapper for the RWKV6 WKV kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rwkv6_wkv.rwkv6_wkv import rwkv6_wkv_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_wkv(r, k, v, logw, u, *, chunk=64, interpret=False):
+    return rwkv6_wkv_kernel(r, k, v, logw, u, chunk=chunk,
+                            interpret=interpret)

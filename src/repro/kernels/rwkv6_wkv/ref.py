@@ -1,0 +1,22 @@
+"""Per-token oracle for the RWKV6 WKV recurrence (same semantics as
+repro.models.rwkv.wkv_scan, standalone for kernel validation)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def wkv_ref(r, k, v, logw, u):
+    """r, k, v, logw: (b, h, s, n); u: (h, n) -> (b, h, s, n). fp64 numpy."""
+    r, k, v, logw, u = (np.asarray(x, np.float64) for x in (r, k, v, logw, u))
+    b, h, s, n = r.shape
+    o = np.zeros_like(r)
+    for ib in range(b):
+        for ih in range(h):
+            S = np.zeros((n, n))
+            for t in range(s):
+                rt, kt, vt = r[ib, ih, t], k[ib, ih, t], v[ib, ih, t]
+                wt = np.exp(logw[ib, ih, t])
+                o[ib, ih, t] = rt @ (S + np.outer(u[ih] * kt, vt))
+                S = wt[:, None] * S + np.outer(kt, vt)
+    return jnp.asarray(o, jnp.float32)

@@ -1,0 +1,87 @@
+"""RWKV-6 WKV recurrence TPU kernel — chunk-parallel formulation.
+
+Per (batch, head): state S in R^{n x n};
+    o_t = r_t . (S_{t-1} + u * k_t (x) v_t)
+    S_t = diag(w_t) S_{t-1} + k_t (x) v_t,  w_t = exp(logw_t)
+
+Within a chunk of L tokens the kernel materializes the pairwise decay
+tensor exp(Q_t - P_i) in VMEM ((L, L, n) fp32 — e.g. 1 MiB at L=64, n=64)
+and reduces it with MXU dots; the cross-chunk state is carried in VMEM
+scratch across the sequential last grid dimension.  This is the TPU
+adaptation of the CUDA wkv kernel's per-thread serial loop: sequential
+depth drops from seq to seq/L, the rest is dense linear algebra.
+
+Grid: (batch, heads, n_chunks).  Blocks: r/k/v/logw tiles (1, 1, L, n).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, s_scr, *, L: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = r_ref[0, 0].astype(jnp.float32)       # (L, n)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    lw = lw_ref[0, 0].astype(jnp.float32)     # log decay, <= 0
+    u = u_ref[0].astype(jnp.float32)          # (1, n) bonus
+    s = s_scr[...]                            # (n, n)
+
+    p_cum = jnp.cumsum(lw, axis=0)            # P_t: through token t
+    q_cum = p_cum - lw                        # Q_t: through token t-1
+
+    # inter-chunk: o_t += (r_t * exp(Q_t)) @ S
+    r_dec = r * jnp.exp(q_cum)
+    o = jax.lax.dot_general(r_dec, s, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # intra-chunk: A[t, i] = sum_c r[t, c] k[i, c] exp(Q_t[c] - P_i[c]), i<t
+    diff = q_cum[:, None, :] - p_cum[None, :, :]          # (L, L, n)
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    i_idx = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    tri = (i_idx < t_idx)[..., None]
+    decay = jnp.where(tri, jnp.exp(diff), 0.0)
+    A = jnp.einsum("tc,tic->ti", r, decay * k[None, :, :])
+    o = o + jax.lax.dot_general(A, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+    # current-token bonus: o_t += (r_t * u * k_t) . v_t
+    o = o + jnp.sum(r * u * k, axis=1, keepdims=True) * v
+
+    # state update: S <- diag(exp(P_L)) S + sum_i (k_i exp(P_L - P_i)) (x) v_i
+    carry_k = k * jnp.exp(p_cum[-1][None, :] - p_cum)     # (L, n)
+    s_scr[...] = jnp.exp(p_cum[-1])[:, None] * s + jax.lax.dot_general(
+        carry_k, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    o_ref[0, 0] = o.astype(o_ref.dtype)
+
+
+def rwkv6_wkv_kernel(r, k, v, logw, u, *, chunk: int = 64,
+                     interpret: bool = False):
+    """r, k, v, logw: (b, h, s, n); u: (h, n) -> o (b, h, s, n)."""
+    b, h, s, n = r.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    grid = (b, h, s // chunk)
+    kernel = functools.partial(_kernel, L=chunk)
+    tile = pl.BlockSpec((1, 1, chunk, n), lambda ib, ih, ic: (ib, ih, ic, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[tile, tile, tile, tile,
+                  pl.BlockSpec((1, n), lambda ib, ih, ic: (ih, 0))],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((b, h, s, n), r.dtype),
+        scratch_shapes=[pltpu.VMEM((n, n), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, logw, u)

@@ -1,0 +1,27 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state.  The dry-run launcher sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; smoke tests and benches see the real single CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_dev_mesh(data: int = 1, model: int = 1, pod: int = 0):
+    """Small meshes for tests (must divide the available device count)."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_chips(mesh) -> int:
+    return mesh.devices.size

@@ -1,0 +1,204 @@
+"""Step-function assembly: jitted train / prefill / decode with explicit
+in/out shardings for a given (arch config x input shape x mesh) cell.
+
+This is the seam between the model zoo and the distribution layer — the
+dry-run, the trainer, and the server all build their step functions here so
+every entry point uses identical sharding decisions.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import model
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.init import abstract_params
+from repro.optim import AdamWConfig, adamw_apply, adamw_init
+from repro.parallel import sharding as shlib
+from repro.parallel.ctx import ParallelCtx, parallel_ctx
+
+PyTree = Any
+
+
+def make_ctx(cfg: ModelConfig, mesh: Mesh) -> ParallelCtx:
+    return ParallelCtx(
+        mesh,
+        dp_axes=("pod", "data"),
+        tp_axis="model",
+        sp_axis="model" if cfg.seq_shard_activations else None,
+        bf16_grad=cfg.bf16_grad_reduce,
+    )
+
+
+def named(mesh, tree_of_pspecs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig):
+    lfn = model.loss_fn(cfg)
+
+    def cast(p):
+        # Mixed precision: differentiate wrt bf16 copies so FSDP gathers and
+        # gradient reductions move bf16, not fp32 (2x collective-term win);
+        # fp32 master weights live only in the optimizer update.
+        if p.dtype == jnp.float32 and p.ndim > 1:
+            return p.astype(cfg.compute_dtype)
+        return p
+
+    mb = max(1, cfg.microbatches)
+
+    def constrain_grads(grads):
+        """Pin grads to their final sharding while still bf16: otherwise
+        XLA sinks the data-parallel all-reduce below the optimizer's
+        astype(f32) and reduces in fp32 (2x bytes) — EXPERIMENTS §Perf."""
+        if not cfg.bf16_grad_reduce:
+            return grads
+        from repro.parallel.ctx import get_ctx
+        from repro.parallel.sharding import param_pspecs
+
+        ctx = get_ctx()
+        if ctx is None:
+            return grads
+        specs = param_pspecs(cfg, ctx.mesh)
+        return jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(
+                g, jax.sharding.NamedSharding(ctx.mesh, s)),
+            grads, specs)
+
+    def train_step(state, batch):
+        params_c = jax.tree.map(cast, state["params"])
+        if mb > 1:
+            # gradient accumulation: fp32 grad buffer, one optimizer step
+            split = jax.tree.map(
+                lambda a: a.reshape(mb, a.shape[0] // mb, *a.shape[1:]),
+                batch)
+
+            def body(carry, mbatch):
+                acc, loss_acc = carry
+                (loss, _), grads = jax.value_and_grad(
+                    lfn, has_aux=True)(params_c, mbatch)
+                grads = constrain_grads(grads)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), acc, grads)
+                return (acc, loss_acc + loss), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params_c)
+            (gsum, loss_sum), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32)), split)
+            grads = jax.tree.map(lambda g: g / mb, gsum)
+            loss = loss_sum / mb
+            metrics = {}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                lfn, has_aux=True)(params_c, batch)
+            grads = constrain_grads(grads)
+        new_p, new_opt, om = adamw_apply(grads, state["opt"],
+                                         state["params"], opt_cfg)
+        return ({"params": new_p, "opt": new_opt},
+                {"loss": loss, **metrics, **om})
+
+    return train_step
+
+
+def abstract_train_state(cfg: ModelConfig) -> PyTree:
+    params = abstract_params(cfg)
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    return {
+        "params": params,
+        "opt": {
+            "m": jax.tree.map(f32, params),
+            "v": jax.tree.map(f32, params),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        },
+    }
+
+
+def train_state_shardings(cfg: ModelConfig, mesh: Mesh, rules=None) -> PyTree:
+    pshard = shlib.param_shardings(cfg, mesh, rules)
+    return {
+        "params": pshard,
+        "opt": {
+            "m": pshard,
+            "v": pshard,
+            "step": NamedSharding(mesh, P()),
+        },
+    }
+
+
+def init_train_state(cfg: ModelConfig, key, mesh: Optional[Mesh] = None):
+    params = model.init_params(cfg, key)
+    state = {"params": params, "opt": adamw_init(params)}
+    if mesh is not None:
+        shards = train_state_shardings(cfg, mesh)
+        state = jax.device_put(state, shards)
+    return state
+
+
+def jit_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                   opt_cfg: Optional[AdamWConfig] = None, rules=None):
+    """Returns (jitted_fn, abstract_args, ctx). Lower with fn.lower(*args)."""
+    opt_cfg = opt_cfg or AdamWConfig()
+    step = make_train_step(cfg, opt_cfg)
+    state_sh = train_state_shardings(cfg, mesh, rules)
+    batch_abs = model.input_specs(cfg, shape)
+    batch_sh = named(mesh, shlib.batch_pspecs(cfg, batch_abs, mesh))
+    fn = jax.jit(step,
+                 in_shardings=(state_sh, batch_sh),
+                 out_shardings=(state_sh, None),
+                 donate_argnums=(0,))
+    return fn, (abstract_train_state(cfg), batch_abs), make_ctx(cfg, mesh)
+
+
+# ---------------------------------------------------------------------------
+# Serve: prefill + decode
+# ---------------------------------------------------------------------------
+
+def jit_prefill_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                     rules=None):
+    pfn = model.prefill_fn(cfg)
+
+    def prefill_step(params, batch):
+        return pfn(params, batch)
+
+    param_sh = shlib.param_shardings(cfg, mesh, rules)
+    batch_abs = model.input_specs(cfg, shape)
+    batch_sh = named(mesh, shlib.batch_pspecs(cfg, batch_abs, mesh))
+    fn = jax.jit(prefill_step, in_shardings=(param_sh, batch_sh))
+    return fn, (abstract_params(cfg), batch_abs), make_ctx(cfg, mesh)
+
+
+def jit_decode_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                    rules=None):
+    dfn = model.decode_fn(cfg)
+    param_sh = shlib.param_shardings(cfg, mesh, rules)
+    specs = model.input_specs(cfg, shape)
+    tok_abs, cache_abs = specs["token"], specs["cache"]
+    tok_sh = named(mesh, shlib.batch_pspecs(cfg, tok_abs, mesh))
+    cache_sh = named(mesh, shlib.cache_pspecs(cfg, cache_abs, mesh))
+    fn = jax.jit(dfn,
+                 in_shardings=(param_sh, tok_sh, cache_sh),
+                 out_shardings=(None, cache_sh),
+                 donate_argnums=(2,))
+    return fn, (abstract_params(cfg), tok_abs, cache_abs), make_ctx(cfg, mesh)
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, rules=None):
+    """Lower one assignment cell under its ParallelCtx. Returns Lowered."""
+    if shape.kind == "train":
+        fn, args, ctx = jit_train_step(cfg, shape, mesh, rules=rules)
+    elif shape.kind == "prefill":
+        fn, args, ctx = jit_prefill_step(cfg, shape, mesh, rules=rules)
+    else:
+        fn, args, ctx = jit_decode_step(cfg, shape, mesh, rules=rules)
+    with parallel_ctx(ctx):
+        return fn.lower(*args)

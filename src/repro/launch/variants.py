@@ -1,0 +1,67 @@
+"""Named optimization variants for §Perf hillclimbing.
+
+Each variant is a config transform applied on top of the paper-faithful
+baseline; the dry-run CLI (--variant) and benchmarks/perf_iters.py resolve
+them here so every measurement names exactly what changed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict
+
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def _v(**kw) -> Callable[[ModelConfig], ModelConfig]:
+    return lambda cfg: dataclasses.replace(cfg, **kw)
+
+
+VARIANTS: Dict[str, Callable[[ModelConfig], ModelConfig]] = {
+    "baseline": lambda cfg: cfg,
+    # MoE dispatch: GSPMD sort/scatter -> explicit shard_map EP/TP
+    "moe_shard_map": _v(moe_impl="ep"),
+    # gradient-accumulation microbatching (activation-memory lever)
+    "microbatch2": _v(microbatches=2),
+    "microbatch4": _v(microbatches=4),
+    "microbatch8": _v(microbatches=8),
+    # seq-chunked cross-entropy (logits-memory lever)
+    "loss_chunk512": _v(loss_chunk=512),
+    # smaller attention query blocks (VMEM/live-buffer lever)
+    "attn_chunk512": _v(attn_chunk=512),
+    "attn_chunk2048": _v(attn_chunk=2048),
+    # no sequence parallelism (ablation: what SP buys)
+    "no_sp": _v(seq_shard_activations=False),
+    # no remat (ablation: memory/compute trade)
+    "no_remat": _v(remat=False),
+    # collective-term levers (EXPERIMENTS §Perf, qwen2-72b train diagnosis)
+    "kv_gather": _v(attn_kv_gather=True),
+    "bf16_grads": _v(bf16_grad_reduce=True),
+    # combos used in §Perf
+    "mb4_losschunk": _v(microbatches=4, loss_chunk=512),
+    "moe_sm_mb4": _v(moe_impl="ep", microbatches=4),
+    "moe_sm_mb4_losschunk": _v(moe_impl="ep", microbatches=4,
+                               loss_chunk=512),
+    "moe_sm_losschunk": _v(moe_impl="ep", loss_chunk=512),
+    "kv_bf16": _v(attn_kv_gather=True, bf16_grad_reduce=True),
+    # kv_gather REFUTED for train (gathered kv held live in bwd: +34 GiB;
+    # see EXPERIMENTS §Perf) — dense_opt uses bf16 grads + mb + loss chunk.
+    "dense_opt": _v(bf16_grad_reduce=True, microbatches=4, loss_chunk=512),
+    "moe_opt": _v(moe_impl="ep", bf16_grad_reduce=True, microbatches=4,
+                  loss_chunk=512),
+    "kvg_opt": _v(attn_kv_gather=True, bf16_grad_reduce=True,
+                  microbatches=4, loss_chunk=512),
+    # comm-neutral memory levers (no microbatching: 1x gathers/reduces)
+    "lc_ac512": _v(loss_chunk=512, attn_chunk=512, bf16_grad_reduce=True),
+    "mb2_lc": _v(microbatches=2, loss_chunk=512, bf16_grad_reduce=True),
+    "mb8_lc": _v(microbatches=8, loss_chunk=512, bf16_grad_reduce=True),
+    # serving: bf16 checkpoint weights (standard for inference)
+    "serve_bf16": _v(param_dtype=jnp.bfloat16),
+    "decode_unrolled": _v(decode_unroll=True),
+    "decode_opt": _v(decode_unroll=True, param_dtype=jnp.bfloat16),
+}
+
+
+def apply_variant(cfg: ModelConfig, name: str) -> ModelConfig:
+    return VARIANTS[name](cfg)

@@ -1,0 +1,2 @@
+from repro.models.config import (ModelConfig, ShapeConfig, SHAPES,
+                                 SHAPES_BY_NAME, shape_applicable)  # noqa: F401

@@ -1,0 +1,330 @@
+"""Parameter specification + initialization for every architecture family.
+
+Every parameter is described by a :class:`ParamSpec` carrying its shape,
+dtype and *logical axis names*.  The parallel layer (`repro.parallel`) maps
+logical axes onto mesh axes; the dry-run builds ShapeDtypeStructs from the
+same specs without allocating anything.
+
+Parameter tree layout (nested dicts):
+  embed.tok                 (vocab, d)
+  embed.pos_enc             (enc_positions, d)          [whisper]
+  embed.pos_dec             (max_dec_positions, d)      [whisper]
+  blocks.*                  stacked homogeneous decoder blocks (leading L dim)
+  dense_layers.<i>.*        unrolled leading dense layers (deepseek first_k_dense)
+  layers.<i>.*              unrolled heterogeneous blocks (hybrid / recurrentgemma)
+  enc_blocks.* / dec_blocks.*  whisper stacks
+  final_norm                (d,)
+  lm_head                   (d, vocab)                  [absent when tied]
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]          # logical axis names, same rank as shape
+    dtype: Any = jnp.float32
+    init: str = "fan_in"           # fan_in | normal | zeros | ones | lru_a | rwkv_decay
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+# ---------------------------------------------------------------------------
+# Block spec builders
+# ---------------------------------------------------------------------------
+
+def _attn_specs(cfg: ModelConfig, cross: bool = False) -> Dict[str, ParamSpec]:
+    d, q, kv = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    p = {
+        "wq": ParamSpec((d, q), ("embed", "heads")),
+        "wk": ParamSpec((d, kv), ("embed", "kv")),
+        "wv": ParamSpec((d, kv), ("embed", "kv")),
+        "wo": ParamSpec((q, d), ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = ParamSpec((q,), ("vec",), init="zeros")
+        p["bk"] = ParamSpec((kv,), ("vec",), init="zeros")
+        p["bv"] = ParamSpec((kv,), ("vec",), init="zeros")
+    return p
+
+
+def _mlp_specs(cfg: ModelConfig, d_ff: int = 0) -> Dict[str, ParamSpec]:
+    d, ff = cfg.d_model, (d_ff or cfg.d_ff)
+    p = {
+        "wi": ParamSpec((d, ff), ("embed", "ffn")),
+        "wo": ParamSpec((ff, d), ("ffn", "embed")),
+    }
+    if cfg.mlp_gated:
+        p["wg"] = ParamSpec((d, ff), ("embed", "ffn"))
+    return p
+
+
+def _moe_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    p = {
+        "router": ParamSpec((d, e), ("embed", "experts_r")),
+        "experts": {
+            "wi": ParamSpec((e, d, ff), ("experts", "embed", "ffn")),
+            "wg": ParamSpec((e, d, ff), ("experts", "embed", "ffn")),
+            "wo": ParamSpec((e, ff, d), ("experts", "ffn", "embed")),
+        },
+    }
+    if cfg.num_shared_experts > 0:
+        sff = cfg.num_shared_experts * ff
+        p["shared"] = {
+            "wi": ParamSpec((d, sff), ("embed", "ffn")),
+            "wg": ParamSpec((d, sff), ("embed", "ffn")),
+            "wo": ParamSpec((sff, d), ("ffn", "embed")),
+        }
+    return p
+
+
+def _rglru_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    """RecurrentGemma recurrent block: proj -> conv1d -> RG-LRU -> gated out."""
+    d, w = cfg.d_model, cfg.lru_width
+    return {
+        "w_y": ParamSpec((d, w), ("embed", "rnn")),      # value branch
+        "w_gate": ParamSpec((d, w), ("embed", "rnn")),   # multiplicative gate
+        "conv_w": ParamSpec((cfg.conv_width, w), ("vec", "rnn")),
+        "conv_b": ParamSpec((w,), ("vec",), init="zeros"),
+        "lru_wa": ParamSpec((w, w), ("rnn_in", "rnn")),  # recurrence gate
+        "lru_wx": ParamSpec((w, w), ("rnn_in", "rnn")),  # input gate
+        "lru_ba": ParamSpec((w,), ("vec",), init="zeros"),
+        "lru_bx": ParamSpec((w,), ("vec",), init="zeros"),
+        "lru_a": ParamSpec((w,), ("vec",), init="lru_a"),  # log-decay param
+        "w_out": ParamSpec((w, d), ("rnn", "embed")),
+    }
+
+
+def _rwkv_block_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    """RWKV6 'Finch': data-dependent-decay time mix + squared-relu channel mix."""
+    d, ff = cfg.d_model, cfg.d_ff
+    lora = 64
+    return {
+        "ln1": ParamSpec((d,), ("vec",), init="ones"),
+        "ln2": ParamSpec((d,), ("vec",), init="ones"),
+        "tm": {
+            # token-shift interpolation weights for (r, k, v, w, g)
+            "mix": ParamSpec((5, d), ("vec", "embed_v"), init="normal"),
+            "wr": ParamSpec((d, d), ("embed", "rnn")),
+            "wk": ParamSpec((d, d), ("embed", "rnn")),
+            "wv": ParamSpec((d, d), ("embed", "rnn")),
+            "wg": ParamSpec((d, d), ("embed", "rnn")),
+            "wo": ParamSpec((d, d), ("rnn", "embed")),
+            "decay_base": ParamSpec((d,), ("vec",), init="rwkv_decay"),
+            "decay_a": ParamSpec((d, lora), ("embed", "vec"), init="normal"),
+            "decay_b": ParamSpec((lora, d), ("vec", "embed_v"), init="zeros"),
+            "bonus": ParamSpec((cfg.rwkv_heads, cfg.rwkv_head_dim), ("vec", "vec2"), init="normal"),
+            "gn": ParamSpec((d,), ("vec",), init="ones"),
+        },
+        "cm": {
+            "mix": ParamSpec((2, d), ("vec", "embed_v"), init="normal"),
+            "wk": ParamSpec((d, ff), ("embed", "ffn")),
+            "wv": ParamSpec((ff, d), ("ffn", "embed")),
+            "wr": ParamSpec((d, d), ("embed", "rnn")),
+        },
+    }
+
+
+def _decoder_block_specs(cfg: ModelConfig, moe: bool) -> Dict[str, ParamSpec]:
+    p: Dict[str, Any] = {
+        "ln1": ParamSpec((cfg.d_model,), ("vec",), init="ones"),
+        "ln2": ParamSpec((cfg.d_model,), ("vec",), init="ones"),
+        "attn": _attn_specs(cfg),
+    }
+    if cfg.norm_type == "layernorm":
+        p["ln1_b"] = ParamSpec((cfg.d_model,), ("vec",), init="zeros")
+        p["ln2_b"] = ParamSpec((cfg.d_model,), ("vec",), init="zeros")
+    if moe:
+        p["moe"] = _moe_specs(cfg)
+    else:
+        p["mlp"] = _mlp_specs(cfg)
+    return p
+
+
+def _hybrid_block_specs(cfg: ModelConfig, layer_idx: int) -> Dict[str, ParamSpec]:
+    p: Dict[str, Any] = {
+        "ln1": ParamSpec((cfg.d_model,), ("vec",), init="ones"),
+        "ln2": ParamSpec((cfg.d_model,), ("vec",), init="ones"),
+        "mlp": _mlp_specs(cfg),
+    }
+    if cfg.is_attention_layer(layer_idx):
+        p["attn"] = _attn_specs(cfg)
+    else:
+        p["rec"] = _rglru_specs(cfg)
+    return p
+
+
+def _whisper_enc_block(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    return {
+        "ln1": ParamSpec((d,), ("vec",), init="ones"),
+        "ln1_b": ParamSpec((d,), ("vec",), init="zeros"),
+        "ln2": ParamSpec((d,), ("vec",), init="ones"),
+        "ln2_b": ParamSpec((d,), ("vec",), init="zeros"),
+        "attn": _attn_specs(cfg),
+        "mlp": _mlp_specs(cfg),
+    }
+
+
+def _whisper_dec_block(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    return {
+        "ln1": ParamSpec((d,), ("vec",), init="ones"),
+        "ln1_b": ParamSpec((d,), ("vec",), init="zeros"),
+        "ln_x": ParamSpec((d,), ("vec",), init="ones"),
+        "ln_x_b": ParamSpec((d,), ("vec",), init="zeros"),
+        "ln2": ParamSpec((d,), ("vec",), init="ones"),
+        "ln2_b": ParamSpec((d,), ("vec",), init="zeros"),
+        "attn": _attn_specs(cfg),
+        "xattn": _attn_specs(cfg, cross=True),
+        "mlp": _mlp_specs(cfg),
+    }
+
+
+def _stack(tree: PyTree, n: int) -> PyTree:
+    """Prepend a stacked `layers` axis of length n to every spec in tree."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.dtype, s.init),
+        tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Full-model spec trees
+# ---------------------------------------------------------------------------
+
+def spec_tree(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    tree: Dict[str, Any] = {
+        "embed": {"tok": ParamSpec((cfg.vocab_size, d), ("vocab", "embed"), init="normal")},
+        "final_norm": ParamSpec((d,), ("vec",), init="ones"),
+    }
+    if cfg.norm_type == "layernorm":
+        tree["final_norm_b"] = ParamSpec((d,), ("vec",), init="zeros")
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = ParamSpec((d, cfg.vocab_size), ("embed", "vocab"))
+
+    if cfg.family == "encdec":
+        tree["embed"]["pos_dec"] = ParamSpec((32_768, d), ("pos", "embed"), init="normal")
+        tree["final_norm_enc"] = ParamSpec((d,), ("vec",), init="ones")
+        tree["final_norm_enc_b"] = ParamSpec((d,), ("vec",), init="zeros")
+        tree["enc_blocks"] = _stack(_whisper_enc_block(cfg), cfg.encoder_layers)
+        tree["dec_blocks"] = _stack(_whisper_dec_block(cfg), cfg.num_layers)
+        return _apply_param_dtype(tree, cfg)
+
+    if cfg.family == "hybrid":
+        # heterogeneous 1:2 attention:recurrent pattern -> unrolled layers
+        tree["layers"] = {
+            str(i): _hybrid_block_specs(cfg, i) for i in range(cfg.num_layers)
+        }
+        return _apply_param_dtype(tree, cfg)
+
+    if cfg.family == "ssm":
+        tree["blocks"] = _stack(_rwkv_block_specs(cfg), cfg.num_layers)
+        return _apply_param_dtype(tree, cfg)
+
+    # dense / moe / vlm decoder-only stacks
+    n_scanned = cfg.num_layers - cfg.first_k_dense
+    if cfg.first_k_dense > 0:
+        dense_cfg = cfg
+        tree["dense_layers"] = {
+            str(i): {
+                "ln1": ParamSpec((d,), ("vec",), init="ones"),
+                "ln2": ParamSpec((d,), ("vec",), init="ones"),
+                "attn": _attn_specs(cfg),
+                "mlp": _mlp_specs(cfg, cfg.d_ff_dense or cfg.d_ff),
+            }
+            for i in range(cfg.first_k_dense)
+        }
+    tree["blocks"] = _stack(
+        _decoder_block_specs(cfg, moe=cfg.num_experts > 0), n_scanned
+    )
+    return _apply_param_dtype(tree, cfg)
+
+
+def _apply_param_dtype(tree, cfg: ModelConfig):
+    """Matrix weights take cfg.param_dtype (bf16 serving checkpoints);
+    vectors/norms stay fp32."""
+    if cfg.param_dtype == jnp.float32:
+        return tree
+    return jax.tree.map(
+        lambda s: (ParamSpec(s.shape, s.axes, cfg.param_dtype, s.init)
+                   if len(s.shape) >= 2 else s),
+        tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def param_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    """Flat {dotted.name: ParamSpec} view (for counting / sharding tables)."""
+    flat = {}
+
+    def visit(prefix, node):
+        if isinstance(node, ParamSpec):
+            flat[prefix] = node
+            return
+        for k, v in node.items():
+            visit(f"{prefix}.{k}" if prefix else k, v)
+
+    visit("", spec_tree(cfg))
+    return flat
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+def _init_leaf(key, spec: ParamSpec, cfg: ModelConfig):
+    shape, dtype = spec.shape, spec.dtype
+    if spec.init == "zeros":
+        return jnp.zeros(shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(shape, dtype)
+    if spec.init == "normal":
+        return (0.02 * jax.random.normal(key, shape)).astype(dtype)
+    if spec.init == "lru_a":
+        # RG-LRU decay in [0.9, 0.999]:  a = sigmoid(p) ** (c) parameterised via
+        # softplus-log trick; store p with a ~ U[0.9, 0.999].
+        u = jax.random.uniform(key, shape, minval=0.9, maxval=0.999)
+        return jnp.log(-jnp.log(u)).astype(dtype)  # a = exp(-exp(p))
+    if spec.init == "rwkv_decay":
+        # per-channel decay ramp as in RWKV reference inits
+        d = shape[-1]
+        ramp = jnp.arange(d) / max(d - 1, 1)
+        return jnp.broadcast_to((-6.0 + 5.0 * ramp).astype(dtype), shape)
+    # fan_in scaled
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> PyTree:
+    tree = spec_tree(cfg)
+    leaves, treedef = jax.tree.flatten(
+        tree, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(k, s, cfg) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(cfg: ModelConfig) -> PyTree:
+    """ShapeDtypeStruct pytree — used by the dry-run (no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        spec_tree(cfg),
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )

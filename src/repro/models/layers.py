@@ -1,0 +1,124 @@
+"""Primitive layers shared by every architecture family (pure JAX)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def rmsnorm(x, w, eps: float):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    x32 = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (x32 * w.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x, w, b, eps: float):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def norm(x, block, name: str, cfg: ModelConfig):
+    if cfg.norm_type == "layernorm":
+        return layernorm(x, block[name], block[f"{name}_b"], cfg.norm_eps)
+    return rmsnorm(x, block[name], cfg.norm_eps)
+
+
+@jax.custom_vjp
+def _dense_bf16grad(x, w):
+    return jnp.einsum("...d,df->...f", x, w,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def _dense_bf16grad_fwd(x, w):
+    return _dense_bf16grad(x, w), (x, w)
+
+
+def _dense_bf16grad_bwd(res, dy):
+    x, w = res
+    dy = dy.astype(x.dtype)
+    gx = jnp.einsum("...f,df->...d", dy, w,
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    # weight-grad partials in bf16: the batch/seq contraction is sharded
+    # over data, so the per-device partial dot's OUTPUT dtype is what the
+    # data-parallel all-reduce moves.  fp32 output would force an fp32
+    # all-reduce (a cast after the reduce cannot move before it); bf16
+    # output halves the dominant collective (EXPERIMENTS §Perf; MXU still
+    # accumulates fp32 internally, and fp32 Adam absorbs the rounding).
+    gw = jnp.einsum("...d,...f->df", x, dy,
+                    preferred_element_type=w.dtype)
+    return gx, gw
+
+
+_dense_bf16grad.defvjp(_dense_bf16grad_fwd, _dense_bf16grad_bwd)
+
+
+def dense(x, w, b=None):
+    """x @ w in compute dtype with fp32 accumulation."""
+    from repro.parallel.ctx import get_ctx
+
+    ctx = get_ctx()
+    if ctx is not None and getattr(ctx, "bf16_grad", False) \
+            and w.ndim == 2 and w.dtype == x.dtype:
+        y = _dense_bf16grad(x, w)
+    else:
+        y = jnp.einsum("...d,df->...f", x, w.astype(x.dtype),
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def mlp(x, p, cfg: ModelConfig):
+    """(Gated) MLP: silu/gelu — SwiGLU or GeGLU when cfg.mlp_gated."""
+    act = jax.nn.silu if cfg.mlp_activation == "silu" else jax.nn.gelu
+    h = dense(x, p["wi"])
+    if cfg.mlp_gated:
+        h = act(dense(x, p["wg"])) * h
+    else:
+        h = act(h)
+    return dense(h, p["wo"])
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding. x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, half)
+    cos = jnp.cos(angles)[..., :, None, :]   # (..., seq, 1, half)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def embed_tokens(tokens, w, compute_dtype):
+    return jnp.take(w, tokens, axis=0).astype(compute_dtype)
+
+
+def lm_logits(x, params, cfg: ModelConfig, softcap: float = 0.0):
+    if cfg.tie_embeddings:
+        w = params["embed"]["tok"].T
+    else:
+        w = params["lm_head"]
+    logits = jnp.einsum("...d,dv->...v", x, w.astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    cap = softcap or cfg.logit_softcap
+    if cap > 0:
+        logits = cap * jnp.tanh(logits / cap)
+    return logits
+
+
+def softmax_xent(logits, labels):
+    """Mean token cross-entropy in fp32 — works with vocab-sharded logits."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)

@@ -1,0 +1,85 @@
+"""Family dispatch façade: one API for every architecture.
+
+    loss_fn(cfg)    -> f(params, batch)          (mean loss, metrics)
+    prefill_fn(cfg) -> f(params, batch)          (logits, cache)
+    decode_fn(cfg)  -> f(params, token, cache)   (logits, cache)
+    input_specs(cfg, shape)                      abstract batch for dry-run
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer, whisper
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.init import abstract_params, init_params  # noqa: F401
+
+PyTree = Any
+
+
+def loss_fn(cfg: ModelConfig) -> Callable:
+    if cfg.family == "encdec":
+        return lambda p, b: whisper.loss_fn(p, b, cfg)
+    return lambda p, b: transformer.loss_fn(p, b, cfg)
+
+
+def prefill_fn(cfg: ModelConfig) -> Callable:
+    if cfg.family == "encdec":
+        return lambda p, b: whisper.prefill(p, b, cfg)
+    return lambda p, b: transformer.prefill(p, b, cfg)
+
+
+def decode_fn(cfg: ModelConfig) -> Callable:
+    if cfg.family == "encdec":
+        return lambda p, t, c: whisper.decode_step(p, t, c, cfg)
+    return lambda p, t, c: transformer.decode_step(p, t, c, cfg)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, abstract=False):
+    return transformer.init_cache(cfg, batch, seq_len, abstract)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                abstract: bool = True) -> Dict[str, Any]:
+    """Abstract (ShapeDtypeStruct) model inputs for one assignment cell."""
+
+    def arr(shp, dtype):
+        return (jax.ShapeDtypeStruct(shp, dtype) if abstract
+                else jnp.zeros(shp, dtype))
+
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        batch: Dict[str, Any] = {}
+        if cfg.family == "vlm":
+            p = cfg.num_patches
+            batch["tokens"] = arr((b, s - p), jnp.int32)
+            batch["patches"] = arr((b, p, cfg.d_model), jnp.bfloat16)
+        elif cfg.family == "encdec":
+            batch["tokens"] = arr((b, s), jnp.int32)
+            batch["frames"] = arr((b, cfg.encoder_positions, cfg.d_model),
+                                  jnp.bfloat16)
+        else:
+            batch["tokens"] = arr((b, s), jnp.int32)
+        return batch
+    # decode: one new token against a seq_len-deep cache
+    return {
+        "token": arr((b,), jnp.int32),
+        "cache": init_cache(cfg, b, s, abstract=abstract),
+    }
+
+
+def synthetic_batch(cfg: ModelConfig, shape: ShapeConfig, key) -> Dict[str, Any]:
+    """Concrete random inputs matching input_specs (for examples/benches)."""
+    specs = input_specs(cfg, shape, abstract=True)
+
+    def fill(spec):
+        if jnp.issubdtype(spec.dtype, jnp.integer):
+            return jax.random.randint(key, spec.shape, 0,
+                                      min(cfg.vocab_size, 32_000),
+                                      dtype=spec.dtype)
+        return jnp.zeros(spec.shape, spec.dtype)
+
+    return jax.tree.map(fill, specs,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))

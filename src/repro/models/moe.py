@@ -1,0 +1,131 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-bounded, sort-based
+dispatch (token-drop on overflow, GShard-style).
+
+Two implementations share the router:
+  * ``moe_gspmd``  — plain jit; XLA/GSPMD chooses collectives (baseline).
+  * ``repro.parallel.moe_ep.moe_ep`` — shard_map expert-parallel all-to-all
+    (production path, selected with cfg.moe_impl == "ep").
+
+FLOP cost is proportional to *active* params (capacity-bounded batched
+matmul), not total experts — the dense-einsum dispatch trap is avoided by
+sort+gather, which is O(T log T) data movement and zero matmul FLOPs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense
+
+
+def router_topk(x2d, router_w, cfg: ModelConfig):
+    """x2d: (T, d) -> gates (T, k) fp32, expert idx (T, k) int32, aux loss."""
+    logits = jnp.einsum("td,de->te", x2d.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.experts_per_token)
+    if cfg.router_renormalize:
+        gates = gates / (jnp.sum(gates, axis=-1, keepdims=True) + 1e-9)
+    # Switch-style load-balancing auxiliary loss
+    e = cfg.num_experts
+    me = jnp.mean(jax.nn.one_hot(idx[:, 0], e), axis=0)       # fraction routed
+    ce = jnp.mean(probs, axis=0)                              # mean router prob
+    aux = e * jnp.sum(me * ce)
+    return gates, idx, aux
+
+
+def capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = int(math.ceil(n_tokens * cfg.experts_per_token
+                      / cfg.num_experts * cfg.capacity_factor))
+    return max(8, -(-c // 8) * 8)  # round up to 8 for tiling
+
+
+def build_dispatch(idx, n_tokens: int, cap: int, cfg: ModelConfig):
+    """Sort assignments by expert; compute (expert, slot) for each (token, k).
+
+    Returns sorted token ids, expert ids, slot-in-expert, and keep mask
+    (slot < capacity); all shape (T*k,).
+    """
+    k = cfg.experts_per_token
+    flat_e = idx.reshape(-1)                                 # (T*k,)
+    order = jnp.argsort(flat_e)                              # stable
+    tok = (jnp.arange(n_tokens * k) // k)[order]
+    e_sorted = flat_e[order]
+    starts = jnp.searchsorted(e_sorted, jnp.arange(cfg.num_experts))
+    slot = jnp.arange(n_tokens * k) - starts[e_sorted]
+    keep = slot < cap
+    return tok, e_sorted, slot, keep, order
+
+
+def expert_ffn(xe, experts, cfg: ModelConfig):
+    """xe: (E, C, d) batched through each expert's gated MLP -> (E, C, d)."""
+    act = jax.nn.silu if cfg.mlp_activation == "silu" else jax.nn.gelu
+    h = jnp.einsum("ecd,edf->ecf", xe, experts["wi"].astype(xe.dtype),
+                   preferred_element_type=jnp.float32).astype(xe.dtype)
+    g = jnp.einsum("ecd,edf->ecf", xe, experts["wg"].astype(xe.dtype),
+                   preferred_element_type=jnp.float32).astype(xe.dtype)
+    h = act(g) * h
+    return jnp.einsum("ecf,efd->ecd", h, experts["wo"].astype(xe.dtype),
+                      preferred_element_type=jnp.float32).astype(xe.dtype)
+
+
+def moe_gspmd(x, p, cfg: ModelConfig):
+    """x: (b, s, d) -> (b, s, d), aux_loss.  Plain-jit MoE (GSPMD baseline)."""
+    b, s, d = x.shape
+    t = b * s
+    x2d = x.reshape(t, d)
+    gates, idx, aux = router_topk(x2d, p["router"], cfg)
+    cap = capacity(t, cfg)
+    tok, e_sorted, slot, keep, order = build_dispatch(idx, t, cap, cfg)
+
+    slot_c = jnp.where(keep, slot, 0)
+    # scatter tokens into (E, C, d) expert buffers; dropped tokens masked out
+    buf = jnp.zeros((cfg.num_experts, cap, d), x.dtype)
+    rows = jnp.where(keep[:, None], x2d[tok], 0).astype(x.dtype)
+    buf = buf.at[e_sorted, slot_c].add(rows)
+
+    ye = expert_ffn(buf, p["experts"], cfg)
+
+    # gather expert outputs back, weighted by gate prob
+    g_sorted = gates.reshape(-1)[order]
+    out_rows = ye[e_sorted, slot_c] * jnp.where(keep, g_sorted, 0.0)[:, None].astype(x.dtype)
+    out = jnp.zeros((t, d), x.dtype).at[tok].add(out_rows)
+
+    if cfg.num_shared_experts > 0:
+        out = out + _shared(x2d, p["shared"], cfg)
+    return out.reshape(b, s, d), aux
+
+
+def _shared(x2d, shared, cfg: ModelConfig):
+    act = jax.nn.silu if cfg.mlp_activation == "silu" else jax.nn.gelu
+    h = dense(x2d, shared["wi"])
+    h = act(dense(x2d, shared["wg"])) * h
+    return dense(h, shared["wo"])
+
+
+def moe_block(x, p, cfg: ModelConfig, mesh=None):
+    """Dispatch: GSPMD baseline, or shard_map EP/TP (cfg.moe_impl == "ep").
+
+    EP (all-to-all over `model`) when num_experts divides the model axis;
+    TP (d_ff-sharded experts + psum) otherwise — e.g. Mixtral's 8 experts
+    on a 16-wide axis.
+    """
+    if cfg.moe_impl == "ep":
+        if mesh is None:
+            from repro.parallel.ctx import get_ctx
+
+            ctx = get_ctx()
+            mesh = ctx.mesh if ctx is not None else None
+        if mesh is not None and "model" in mesh.axis_names:
+            from repro.parallel.moe_ep import moe_ep, moe_tp
+
+            n_model = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+            if cfg.num_experts % n_model == 0:
+                return moe_ep(x, p, cfg, mesh)
+            if cfg.d_ff % n_model == 0:
+                return moe_tp(x, p, cfg, mesh)
+    return moe_gspmd(x, p, cfg)

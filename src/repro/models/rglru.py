@@ -1,0 +1,138 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block: x -> {value branch: linear -> causal conv1d -> RG-LRU} * gate branch
+         -> output projection.
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(x_t @ W_a + b_a)                    (recurrence gate)
+    i_t = sigmoid(x_t @ W_x + b_x)                    (input gate)
+    log_a_t = -c * softplus_free(Lambda) * r_t        (c = 8)
+    a_t = exp(log_a_t)        with Lambda parameterised so a in [0.9, 0.999]
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The sequence form runs as an associative scan (O(log seq) depth); decode
+carries (conv_state, h) and is O(1) per token.  The Pallas kernel
+``repro.kernels.rglru_scan`` implements the blocked VMEM version.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense
+
+_C = 8.0
+
+
+def _gates(x, p):
+    r = jax.nn.sigmoid(dense(x, p["lru_wa"], p["lru_ba"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(x, p["lru_wx"], p["lru_bx"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lru_a"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated_x = i * x.astype(jnp.float32)
+    return a, jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12)) * gated_x
+
+
+def _combine(c1, c2):
+    a1, b1 = c1
+    a2, b2 = c2
+    return a1 * a2, a2 * b1 + b2
+
+
+def rglru_scan(x, p, h0=None, chunk: int = 256, unroll: bool = False):
+    """x: (b, s, w) -> (y, h_last).
+
+    Chunked: lax.scan over seq chunks carrying h, associative scan within a
+    chunk — same math as one full-seq associative scan, but the compiled
+    graph is chunk-sized (a full-seq associative scan at 512-device SPMD
+    blows up partitioning time; the Pallas kernel repro.kernels.rglru_scan
+    is the on-TPU fast path).
+    """
+    b, s, w = x.shape
+    a, bx = _gates(x, p)  # (b, s, w) fp32
+
+    def one_chunk(h, ai, bi):
+        bi = bi.at[:, 0].add(ai[:, 0] * h)
+        _, hh = jax.lax.associative_scan(_combine, (ai, bi), axis=1)
+        return hh, hh[:, -1]
+
+    h = (h0.astype(jnp.float32) if h0 is not None
+         else jnp.zeros((b, w), jnp.float32))
+    if s <= chunk or s % chunk:
+        hh, h_last = one_chunk(h, a, bx)
+        return hh.astype(x.dtype), h_last
+
+    nc = s // chunk
+    ac = a.reshape(b, nc, chunk, w).transpose(1, 0, 2, 3)
+    bc = bx.reshape(b, nc, chunk, w).transpose(1, 0, 2, 3)
+
+    def body(h, inp):
+        ai, bi = inp
+        hh, h_last = one_chunk(h, ai, bi)
+        return h_last, hh
+
+    if unroll:
+        outs = []
+        for i in range(nc):
+            hh, h = one_chunk(h, ac[i], bc[i])
+            outs.append(hh)
+        ys = jnp.stack(outs)
+        h_last = h
+    else:
+        h_last, ys = jax.lax.scan(body, h, (ac, bc))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, w)
+    return y.astype(x.dtype), h_last
+
+
+def rglru_step(x, p, h):
+    """x: (b, 1, w), h: (b, w) -> (y (b,1,w), h')."""
+    a, bx = _gates(x, p)
+    h_new = a[:, 0] * h.astype(jnp.float32) + bx[:, 0]
+    return h_new[:, None].astype(x.dtype), h_new
+
+
+def causal_conv1d(x, w, b, state=None):
+    """Depthwise causal conv. x: (b, s, c); w: (width, c).
+
+    When ``state`` (b, width-1, c) is given, runs one-step decode and
+    returns (y, new_state).
+    """
+    width = w.shape[0]
+    if state is not None:
+        window = jnp.concatenate([state, x], axis=1)  # (b, width, c)
+        y = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                       w.astype(jnp.float32)) + b.astype(jnp.float32)
+        return y[:, None].astype(x.dtype), window[:, 1:]
+    pad = jnp.zeros(x.shape[:1] + (width - 1,) + x.shape[2:], x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(
+        xp[:, i:i + x.shape[1]].astype(jnp.float32) * w[i].astype(jnp.float32)
+        for i in range(width)
+    ) + b.astype(jnp.float32)
+    return y.astype(x.dtype), xp[:, -(width - 1):] if width > 1 else None
+
+
+def recurrent_block(x, p, cfg: ModelConfig, state=None):
+    """RecurrentGemma recurrent block. x: (b, s, d).
+
+    state: None (training/prefill from scratch) or dict(conv, h) for decode.
+    Returns (y, new_state).
+    """
+    y = dense(x, p["w_y"])
+    gate = jax.nn.gelu(dense(x, p["w_gate"]))
+    if state is None:
+        y, conv_state = causal_conv1d(y, p["conv_w"], p["conv_b"])
+        y, h = rglru_scan(y, p, unroll=cfg.unroll_loops)
+    else:
+        y, conv_state = causal_conv1d(y, p["conv_w"], p["conv_b"], state["conv"])
+        y, h = rglru_step(y, p, state["h"])
+    out = dense(y * gate, p["w_out"])
+    return out, {"conv": conv_state, "h": h}
+
+
+def init_rec_state(cfg: ModelConfig, batch: int, dtype):
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.lru_width), dtype),
+        "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+    }

@@ -1,0 +1,181 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free time-mix with
+data-dependent per-channel decay + squared-ReLU channel-mix.
+
+Semantics (per head, key/value dim N, state S in R^{NxN}):
+    o_t[j] = sum_i r_t[i] * (S_{t-1}[i,j] + u[i] * k_t[i] * v_t[j])
+    S_t    = diag(w_t) S_{t-1} + k_t (x) v_t
+with w_t = exp(-exp(d_t)) in (0,1), d_t data-dependent (LoRA on the shifted
+input).  Three execution forms, all matching the same oracle:
+
+  * ``wkv_step``     — O(1) decode step (serve path).
+  * ``wkv_scan``     — per-token lax.scan (oracle / small seq).
+  * ``wkv_chunked``  — chunk-parallel (O(L^2 N + L N^2) per chunk) — the
+    XLA analogue of the Pallas kernel ``repro.kernels.rwkv6_wkv``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense
+
+
+# ---------------------------------------------------------------------------
+# WKV core
+# ---------------------------------------------------------------------------
+
+def wkv_step(r, k, v, w, u, state):
+    """One token.  r,k,v,w: (b, h, n); u: (h, n); state: (b, h, n, n)."""
+    rkv = jnp.einsum("bhi,bhi,bhj->bhj", r, u[None] * k, v)
+    o = jnp.einsum("bhi,bhij->bhj", r, state) + rkv
+    state = w[..., None] * state + jnp.einsum("bhi,bhj->bhij", k, v)
+    return o, state
+
+
+def wkv_scan(r, k, v, w, u, state):
+    """Sequence oracle.  r,k,v,w: (b, s, h, n) fp32. Returns (o, state)."""
+
+    def body(s, inp):
+        rt, kt, vt, wt = inp
+        o, s = wkv_step(rt, kt, vt, wt, u, s)
+        return s, o
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    state, o = jax.lax.scan(body, state, xs)
+    return jnp.moveaxis(o, 0, 1), state
+
+
+def _wkv_one_chunk(r, k, v, logw, u, state):
+    """r,k,v,logw: (b, L, h, n) fp32; state (b,h,n,n). Chunk-parallel form."""
+    L = r.shape[1]
+    # P[t] = cumulative log-decay through token t;  Q[t] = through t-1.
+    P = jnp.cumsum(logw, axis=1)                    # (b, L, h, n)
+    Q = P - logw
+    # inter-chunk: o_inter[t] = (r_t * exp(Q_t)) . S0
+    r_dec = r * jnp.exp(Q)
+    o = jnp.einsum("blhi,bhij->blhj", r_dec, state)
+    # intra-chunk: A[t,i] = sum_c r_t[c] exp(Q_t[c]-P_i[c]) k_i[c],  i < t
+    diff = Q[:, :, None] - P[:, None, :, :, :]      # (b, t, i, h, n)
+    diff = jnp.where(jnp.tril(jnp.ones((L, L), bool), -1)[None, :, :, None, None],
+                     diff, -jnp.inf)
+    A = jnp.einsum("blhi,blmhi->blmh", r, jnp.exp(diff) * k[:, None])
+    # wait: diff is (b, t, i, h, n); k broadcast over t -> k[:, None] is (b,1,i,h,n)
+    o = o + jnp.einsum("blmh,bmhj->blhj", A, v)
+    # current-token bonus
+    o = o + jnp.einsum("blhi,blhi,blhj->blhj", r, u[None, None] * k, v)
+    # state update: S_L = diag(exp(P_L)) S0 + sum_i diag(exp(P_L - P_i)) k_i v_i
+    decay_all = jnp.exp(P[:, -1])                   # (b, h, n)
+    carry_k = k * jnp.exp(P[:, -1:, :, :] - P)      # (b, L, h, n)
+    state = decay_all[..., None] * state + jnp.einsum(
+        "blhi,blhj->bhij", carry_k, v)
+    return o, state
+
+
+def wkv_chunked(r, k, v, logw, u, state, chunk: int, unroll: bool = False):
+    """r,k,v,logw: (b, s, h, n) fp32.  Scan (or unroll) over chunks."""
+    b, s, h, n = r.shape
+    if s % chunk or s <= chunk:
+        return wkv_scan(r, k, v, jnp.exp(logw), u, state)
+    nc = s // chunk
+    rs, ks, vs, ws = (
+        t.reshape(b, nc, chunk, h, n).transpose(1, 0, 2, 3, 4)
+        for t in (r, k, v, logw)
+    )
+    if unroll:
+        outs = []
+        for i in range(nc):
+            o, state = _wkv_one_chunk(rs[i], ks[i], vs[i], ws[i], u, state)
+            outs.append(o)
+        o = jnp.stack(outs)
+    else:
+        def body(st, inp):
+            ri, ki, vi, wi = inp
+            o, st = _wkv_one_chunk(ri, ki, vi, wi, u, st)
+            return st, o
+
+        state, o = jax.lax.scan(body, state, (rs, ks, vs, ws))
+    return o.transpose(1, 0, 2, 3, 4).reshape(b, s, h, n), state
+
+
+# ---------------------------------------------------------------------------
+# Block layers
+# ---------------------------------------------------------------------------
+
+def _token_shift(x, last):
+    """last: (b, d) previous token (zeros at t=0). Returns shifted x."""
+    prev = jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+    return prev
+
+
+def _group_norm(x, w, heads, eps=1e-5):
+    """Per-head normalization. x: (b, s, d)."""
+    b, s, d = x.shape
+    xh = x.reshape(b, s, heads, d // heads).astype(jnp.float32)
+    mu = jnp.mean(xh, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xh - mu), axis=-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(b, s, d) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def time_mix(x, p, cfg: ModelConfig, state=None, chunk: int = 64,
+             unroll: bool = False):
+    """RWKV6 attention replacement. x: (b, s, d).
+
+    state: None or dict(last (b,d), s (b,h,n,n)).  Returns (y, new_state).
+    """
+    b, s, d = x.shape
+    h, n = cfg.rwkv_heads, cfg.rwkv_head_dim
+    last = state["last"] if state is not None else jnp.zeros((b, d), x.dtype)
+    prev = _token_shift(x, last)
+    delta = prev - x
+    mix = p["mix"].astype(x.dtype)  # (5, d) for r, k, v, w, g
+    xr, xk, xv, xw, xg = (x + mix[i] * delta for i in range(5))
+
+    r = dense(xr, p["wr"]).reshape(b, s, h, n).astype(jnp.float32)
+    k = dense(xk, p["wk"]).reshape(b, s, h, n).astype(jnp.float32)
+    v = dense(xv, p["wv"]).reshape(b, s, h, n).astype(jnp.float32)
+    g = jax.nn.silu(dense(xg, p["wg"]))
+
+    dlo = jnp.einsum("bsd,dk->bsk", jnp.tanh(xw.astype(jnp.float32)),
+                     p["decay_a"].astype(jnp.float32))
+    dd = p["decay_base"].astype(jnp.float32) + jnp.einsum(
+        "bsk,kd->bsd", dlo, p["decay_b"].astype(jnp.float32))
+    logw = -jnp.exp(jnp.clip(dd, -20.0, 10.0)).reshape(b, s, h, n)
+
+    u = p["bonus"].astype(jnp.float32)
+    s0 = (state["s"] if state is not None
+          else jnp.zeros((b, h, n, n), jnp.float32))
+    if s == 1 and state is not None:
+        o, s1 = wkv_step(r[:, 0], k[:, 0], v[:, 0], jnp.exp(logw)[:, 0], u, s0)
+        o = o[:, None]
+    else:
+        o, s1 = wkv_chunked(r, k, v, logw, u, s0, chunk, unroll)
+
+    o = _group_norm(o.reshape(b, s, d).astype(x.dtype), p["gn"], h)
+    y = dense(o * g, p["wo"])
+    new_state = {"last": x[:, -1].astype(x.dtype), "s": s1}
+    return y, new_state
+
+
+def channel_mix(x, p, cfg: ModelConfig, state=None):
+    """Squared-ReLU channel mix. state: dict(last (b,d)) for decode."""
+    b, s, d = x.shape
+    last = state["last"] if state is not None else jnp.zeros((b, d), x.dtype)
+    prev = _token_shift(x, last)
+    delta = prev - x
+    mix = p["mix"].astype(x.dtype)
+    xk = x + mix[0] * delta
+    xr = x + mix[1] * delta
+    kk = jnp.square(jax.nn.relu(dense(xk, p["wk"])))
+    y = jax.nn.sigmoid(dense(xr, p["wr"])) * dense(kk, p["wv"])
+    return y, {"last": x[:, -1].astype(x.dtype)}
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype):
+    h, n = cfg.rwkv_heads, cfg.rwkv_head_dim
+    return {
+        "tm": {"last": jnp.zeros((batch, cfg.d_model), dtype),
+               "s": jnp.zeros((batch, h, n, n), jnp.float32)},
+        "cm": {"last": jnp.zeros((batch, cfg.d_model), dtype)},
+    }

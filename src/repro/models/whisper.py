@@ -1,0 +1,217 @@
+"""Whisper-medium backbone (arXiv:2212.04356): encoder-decoder transformer.
+
+The conv1d audio frontend is STUBBED per the assignment: ``input_specs``
+provides precomputed frame embeddings (b, 1500, d).  LayerNorm + GELU MLP,
+learned decoder positions (extended to 32k for the decode_32k backbone
+exercise — deviation noted in DESIGN.md), pre-norm, tied output projection.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (cross_attention, decode_self_attention,
+                                    self_attention)
+from repro.models.config import ModelConfig
+from repro.models.layers import (dense, embed_tokens, layernorm, lm_logits,
+                                 mlp, softmax_xent)
+from repro.parallel.ctx import shard_activation
+
+PyTree = Any
+
+
+def _ln(x, bp, name, cfg):
+    return layernorm(x, bp[name], bp[f"{name}_b"], cfg.norm_eps)
+
+
+def _sinusoid(positions: int, d: int):
+    half = d // 2
+    freq = jnp.exp(-jnp.log(10_000.0) * jnp.arange(half) / (half - 1))
+    t = jnp.arange(positions)[:, None] * freq[None, :]
+    return jnp.concatenate([jnp.sin(t), jnp.cos(t)], axis=1)
+
+
+def encode(params, frames, cfg: ModelConfig):
+    """frames: (b, T=1500, d) precomputed conv-frontend output (stub)."""
+    x = frames.astype(cfg.compute_dtype)
+    x = x + _sinusoid(x.shape[1], cfg.d_model).astype(cfg.compute_dtype)
+    x = shard_activation(x, "act")
+
+    def body(h, bp):
+        h = shard_activation(h, "act")
+        a, _ = self_attention(_ln(h, bp, "ln1", cfg), bp["attn"], cfg,
+                              causal=False, use_rope=False)
+        h = h + a
+        h = h + mlp(_ln(h, bp, "ln2", cfg), bp["mlp"], cfg)
+        return h, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    else:
+        for i in range(cfg.encoder_layers):
+            x, _ = body(x, jax.tree.map(lambda a: a[i], params["enc_blocks"]))
+    return layernorm(x, params["final_norm_enc"], params["final_norm_enc_b"],
+                     cfg.norm_eps)
+
+
+def _dec_block(x, bp, cfg, enc_kv, pos_offset=0, cache=None):
+    """One decoder block (train path when cache is None)."""
+    x = shard_activation(x, "act")
+    if cache is None:
+        a, kv = self_attention(_ln(x, bp, "ln1", cfg), bp["attn"], cfg,
+                               causal=True, use_rope=False)
+        new_cache = kv
+    else:
+        st = {"k": cache["k"], "v": cache["v"], "pos": cache["pos"]}
+        a, st = decode_self_attention(_ln(x, bp, "ln1", cfg), bp["attn"], cfg,
+                                      st, use_rope=False)
+        new_cache = (st["k"], st["v"])
+    x = x + a
+    k_enc, v_enc = enc_kv
+    x = x + cross_attention(_ln(x, bp, "ln_x", cfg), bp["xattn"], cfg,
+                            k_enc, v_enc)
+    x = x + mlp(_ln(x, bp, "ln2", cfg), bp["mlp"], cfg)
+    return x, new_cache
+
+
+def _enc_kv(bp, enc_out, cfg):
+    b, t, _ = enc_out.shape
+    k = dense(enc_out, bp["xattn"]["wk"], bp["xattn"].get("bk")).reshape(
+        b, t, cfg.num_kv_heads, cfg.head_dim)
+    v = dense(enc_out, bp["xattn"]["wv"], bp["xattn"].get("bv")).reshape(
+        b, t, cfg.num_kv_heads, cfg.head_dim)
+    return k, v
+
+
+def decode_train(params, tokens, enc_out, cfg: ModelConfig,
+                 collect_caches=False, pos_offset=0):
+    b, s = tokens.shape
+    x = embed_tokens(tokens, params["embed"]["tok"], cfg.compute_dtype)
+    pos = params["embed"]["pos_dec"][pos_offset:pos_offset + s]
+    x = x + pos.astype(cfg.compute_dtype)
+
+    def body(h, bp):
+        enc_kv = _enc_kv(bp, enc_out, cfg)
+        h, kv = _dec_block(h, bp, cfg, enc_kv)
+        return h, (kv if collect_caches else None)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        x, kvs = jax.lax.scan(body, x, params["dec_blocks"])
+    else:
+        kvs = []
+        for i in range(cfg.num_layers):
+            x, kv = body(x, jax.tree.map(lambda a: a[i], params["dec_blocks"]))
+            kvs.append(kv)
+        if collect_caches:
+            kvs = jax.tree.map(lambda *xs: jnp.stack(xs), *kvs)
+    x = layernorm(x, params["final_norm"], params["final_norm_b"], cfg.norm_eps)
+    return x, kvs
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    """batch: frames (b, 1500, d), tokens (b, s)."""
+    enc_out = encode(params, batch["frames"], cfg)
+    x, _ = decode_train(params, batch["tokens"], enc_out, cfg)
+    logits = lm_logits(x[:, :-1], params, cfg)
+    logits = shard_activation(logits, "logits")
+    loss = softmax_xent(logits, batch["tokens"][:, 1:])
+    return loss, {"xent": loss}
+
+
+def prefill(params, batch, cfg: ModelConfig, max_len: int = 0):
+    """Encode audio + run the prompt through the decoder; build decode cache."""
+    from repro.models.transformer import ring_place
+
+    enc_out = encode(params, batch["frames"], cfg)
+    seq = batch["tokens"].shape[1]
+    max_len = max_len or seq + 64
+    x, kvs = decode_train(params, batch["tokens"], enc_out, cfg,
+                          collect_caches=True)
+    logits = lm_logits(x[:, -1:], params, cfg)[:, 0]
+    k_st, v_st = kvs
+    cache = {
+        "pos": jnp.asarray(seq, jnp.int32),
+        "blocks": {"k": ring_place(k_st.astype(cfg.compute_dtype), seq, max_len, 2),
+                   "v": ring_place(v_st.astype(cfg.compute_dtype), seq, max_len, 2)},
+        "enc_out": enc_out,
+    }
+    return logits, cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, abstract=False):
+    def arr(shape, dtype):
+        return (jax.ShapeDtypeStruct(shape, dtype) if abstract
+                else jnp.zeros(shape, dtype))
+
+    dt = cfg.compute_dtype
+    return {
+        "pos": arr((), jnp.int32),
+        "blocks": {
+            "k": arr((cfg.num_layers, batch, seq_len, cfg.num_kv_heads,
+                      cfg.head_dim), dt),
+            "v": arr((cfg.num_layers, batch, seq_len, cfg.num_kv_heads,
+                      cfg.head_dim), dt),
+        },
+        "enc_out": arr((batch, cfg.encoder_positions, cfg.d_model), dt),
+    }
+
+
+def decode_step(params, token, cache, cfg: ModelConfig):
+    """One decoder token with self-cache + cross-attention to enc_out."""
+    pos = cache["pos"]
+    x = embed_tokens(token[:, None], params["embed"]["tok"], cfg.compute_dtype)
+    x = x + jax.lax.dynamic_slice_in_dim(
+        params["embed"]["pos_dec"], pos, 1, axis=0).astype(cfg.compute_dtype)
+    enc_out = cache["enc_out"]
+
+    from repro.models.attention import (decode_attention, merge_heads_out,
+                                        project_qkv)
+
+    ks0, vs0 = cache["blocks"]["k"], cache["blocks"]["v"]
+    b = x.shape[0]
+    s_slots = ks0.shape[2]
+    slot = pos % s_slots
+    n_valid = jnp.minimum(pos + 1, s_slots)
+
+    def body(i, carry):
+        # fori_loop + DUS keeps the donated cache aliased in-place.
+        h, ks, vs = carry
+        bp = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+            params["dec_blocks"])
+        hn = _ln(h, bp, "ln1", cfg)
+        positions = jnp.full((b, 1), pos, jnp.int32)
+        q, k, v = project_qkv(hn, bp["attn"], cfg, positions, use_rope=False)
+        ks = jax.lax.dynamic_update_slice(
+            ks, k.astype(ks.dtype).reshape(1, b, 1, *k.shape[2:]),
+            (i, 0, slot, 0, 0))
+        vs = jax.lax.dynamic_update_slice(
+            vs, v.astype(vs.dtype).reshape(1, b, 1, *v.shape[2:]),
+            (i, 0, slot, 0, 0))
+        k_cache = jax.lax.dynamic_index_in_dim(ks, i, 0, keepdims=False)
+        v_cache = jax.lax.dynamic_index_in_dim(vs, i, 0, keepdims=False)
+        o = decode_attention(q, k_cache, v_cache, n_valid)
+        h = h + merge_heads_out(o, bp["attn"])
+        k_enc, v_enc = _enc_kv(bp, enc_out, cfg)
+        h = h + cross_attention(_ln(h, bp, "ln_x", cfg), bp["xattn"], cfg,
+                                k_enc, v_enc)
+        h = h + mlp(_ln(h, bp, "ln2", cfg), bp["mlp"], cfg)
+        return h, ks, vs
+
+    if cfg.unroll_loops:   # cost-reference compiles (core.costref)
+        carry = (x, ks0, vs0)
+        for i in range(cfg.num_layers):
+            carry = body(jnp.asarray(i), carry)
+        x, ks, vs = carry
+    else:
+        x, ks, vs = jax.lax.fori_loop(0, cfg.num_layers, body, (x, ks0, vs0))
+    x = layernorm(x, params["final_norm"], params["final_norm_b"], cfg.norm_eps)
+    logits = lm_logits(x[:, -1], params, cfg)
+    return logits, {"pos": pos + 1, "blocks": {"k": ks, "v": vs},
+                    "enc_out": enc_out}

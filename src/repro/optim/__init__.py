@@ -1,0 +1,2 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_apply  # noqa: F401
+from repro.optim.schedules import wsd_schedule  # noqa: F401

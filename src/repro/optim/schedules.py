@@ -1,0 +1,29 @@
+"""LR schedules (warmup-stable-decay, cosine)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wsd_schedule(peak: float, warmup: int, stable: int, decay: int,
+                 floor: float = 0.0):
+    """Warmup-Stable-Decay schedule."""
+
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        dec_frac = jnp.clip((step - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        dec = peak + (floor - peak) * dec_frac
+        return jnp.where(step < warmup, warm, dec)
+
+    return f
+
+
+def cosine_schedule(peak: float, warmup: int, total: int, floor: float = 0.0):
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+
+    return f

@@ -1,0 +1,85 @@
+"""Ambient parallelism context.
+
+Model code is mesh-agnostic: it calls :func:`shard_activation` with a logical
+activation kind; the launcher installs a :class:`ParallelCtx` that maps kinds
+to PartitionSpecs for the active mesh.  Without a context every call is a
+no-op, so unit tests and single-device smoke tests never touch device state.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+class ParallelCtx:
+    """Maps logical activation kinds -> PartitionSpec on a concrete mesh.
+
+    dp_axes: mesh axes carrying the batch dim (e.g. ("pod", "data")).
+    sp_axis: mesh axis carrying the sequence dim between blocks (Megatron
+             sequence parallelism), or None.
+    tp_axis: tensor-parallel axis (heads / ffn / vocab).
+    """
+
+    def __init__(self, mesh: Mesh, dp_axes=("data",), tp_axis="model",
+                 sp_axis: Optional[str] = None, bf16_grad: bool = False):
+        self.mesh = mesh
+        self.dp_axes = tuple(a for a in dp_axes if a in mesh.axis_names)
+        self.tp_axis = tp_axis if tp_axis in mesh.axis_names else None
+        self.sp_axis = sp_axis if (sp_axis and sp_axis in mesh.axis_names) else None
+        self.bf16_grad = bf16_grad
+
+    def spec(self, kind: str) -> P:
+        dp = self.dp_axes if len(self.dp_axes) > 1 else (
+            self.dp_axes[0] if self.dp_axes else None)
+        if kind == "tokens":          # (b, s)
+            return P(dp, self.sp_axis)
+        if kind == "act":             # (b, s, d) residual stream
+            return P(dp, self.sp_axis, None)
+        if kind == "act_heads":       # (b, s, h, hd)
+            return P(dp, None, self.tp_axis, None)
+        if kind == "logits":          # (b, s, vocab) — vocab TP-sharded
+            return P(dp, None, self.tp_axis)
+        if kind == "cache":           # (b, S, hkv, hd) — seq-sharded KV cache
+            return P(dp, self.tp_axis, None, None)
+        if kind == "cache_batch":     # (b, S, hkv, hd) — batch-only sharding
+            return P(dp, None, None, None)
+        if kind == "kv_rep":          # (b, s, hkv, hd) K/V replicated over tp
+            return P(dp, None, None, None)
+        if kind == "act_rnn":         # (b, s, rnn_ch) — channel-sharded scan
+            return P(dp, None, self.tp_axis)
+        raise KeyError(kind)
+
+
+def set_ctx(ctx: Optional[ParallelCtx]):
+    _STATE.ctx = ctx
+
+
+def get_ctx() -> Optional[ParallelCtx]:
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def parallel_ctx(ctx: Optional[ParallelCtx]):
+    prev = get_ctx()
+    set_ctx(ctx)
+    try:
+        yield ctx
+    finally:
+        set_ctx(prev)
+
+
+def shard_activation(x, kind: str):
+    """Apply a sharding constraint when a ParallelCtx is installed."""
+    ctx = get_ctx()
+    if ctx is None:
+        return x
+    spec = ctx.spec(kind)
+    if len(spec) > x.ndim:
+        spec = P(*spec[: x.ndim])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))

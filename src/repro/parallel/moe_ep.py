@@ -1,0 +1,161 @@
+"""Expert-parallel MoE via shard_map all-to-all (production path).
+
+GSPMD's handling of the sort/scatter dispatch (repro.models.moe.moe_gspmd)
+can materialize token buffers across the model axis; this path makes the
+communication explicit and minimal:
+
+  tokens sharded over (pod, data) x model  ->  each device routes its local
+  tokens, packs per-destination capacity buffers, all-to-alls over `model`
+  (the expert-owner axis), runs its local experts, all-to-alls back, and
+  combines with gate weights.  Comm volume = 2 * T_local * k * d * cf,
+  exactly the GShard dispatch cost.
+
+Used when cfg.moe_impl == "ep" and num_experts % |model| == 0 (deepseek: 64
+experts over 16 = 4 local experts; mixtral's 8 experts fall back to the
+GSPMD path, where expert FFNs are TP-sharded instead).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.moe import capacity, router_topk, expert_ffn, _shared
+
+
+def moe_tp(x, p, cfg: ModelConfig, mesh: Mesh):
+    """Tensor-parallel MoE for num_experts NOT divisible by |model|
+    (e.g. Mixtral's 8 experts on a 16-wide axis): every model-rank routes
+    the SAME tokens (deterministic router -> identical decisions), runs all
+    experts on its d_ff shard, and a single psum over `model` combines the
+    partial expert outputs — the standard Megatron-MLP comm pattern
+    (one all-reduce of (T_local, d) per layer), with zero dispatch traffic.
+    """
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    in_spec = P(dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None),
+                None, None)
+
+    def local(x_loc, router_w, wi, wg, wo, shared_wi, shared_wg, shared_wo):
+        b, s, d = x_loc.shape
+        t = b * s
+        x2d = x_loc.reshape(t, d)
+        gates, idx, aux = router_topk(x2d, router_w, cfg)
+        cap = capacity(t, cfg)
+
+        k = cfg.experts_per_token
+        flat_e = idx.reshape(-1)
+        order = jnp.argsort(flat_e)
+        tok = (jnp.arange(t * k) // k)[order]
+        e_sorted = flat_e[order]
+        starts = jnp.searchsorted(e_sorted, jnp.arange(cfg.num_experts))
+        slot = jnp.arange(t * k) - starts[e_sorted]
+        keep = slot < cap
+        slot_c = jnp.where(keep, slot, 0)
+
+        buf = jnp.zeros((cfg.num_experts, cap, d), x_loc.dtype)
+        rows = jnp.where(keep[:, None], x2d[tok], 0).astype(x_loc.dtype)
+        buf = buf.at[e_sorted, slot_c].add(rows)
+
+        # expert FFN with d_ff sharded over `model`: partial outputs psum'd
+        ye = expert_ffn(buf, {"wi": wi, "wg": wg, "wo": wo}, cfg)
+
+        g_sorted = gates.reshape(-1)[order]
+        out_rows = ye[e_sorted, slot_c] * jnp.where(
+            keep, g_sorted, 0.0)[:, None].astype(x_loc.dtype)
+        out = jnp.zeros((t, d), x_loc.dtype).at[tok].add(out_rows)
+        if shared_wi is not None:
+            out = out + _shared(x2d, {"wi": shared_wi, "wg": shared_wg,
+                                      "wo": shared_wo}, cfg)
+        out = jax.lax.psum(out, "model")
+        aux = jax.lax.pmean(aux, mesh.axis_names)
+        return out.reshape(b, s, d), aux
+
+    expert_w = P(None, None, "model")     # wi/wg: (E, d, ff) ff-sharded
+    expert_o = P(None, "model", None)     # wo: (E, ff, d)
+    sh = p.get("shared")
+    out, aux = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(in_spec, P(None, None), expert_w, expert_w, expert_o,
+                  P(None, "model") if sh else None,
+                  P(None, "model") if sh else None,
+                  P("model", None) if sh else None),
+        out_specs=(in_spec, P()),
+        check_vma=False,
+    )(x, p["router"],
+      p["experts"]["wi"], p["experts"]["wg"], p["experts"]["wo"],
+      sh["wi"] if sh else None, sh["wg"] if sh else None,
+      sh["wo"] if sh else None)
+    return out, aux
+
+
+def moe_ep(x, p, cfg: ModelConfig, mesh: Mesh):
+    """x: (b, s, d) -> (out, aux).  Requires num_experts % |model| == 0."""
+    n_model = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    assert cfg.num_experts % n_model == 0, (cfg.num_experts, n_model)
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    e_loc = cfg.num_experts // n_model
+
+    in_spec = P(dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None),
+                "model", None)
+    router_spec = jax.tree.map(lambda _: P(*([None] * 2)), p["router"])
+
+    def local(x_loc, router_w, wi, wg, wo, shared_p):
+        b, s, d = x_loc.shape
+        t = b * s
+        x2d = x_loc.reshape(t, d)
+        gates, idx, aux = router_topk(x2d, router_w, cfg)
+        cap = capacity(t, cfg)  # local capacity per expert per source device
+
+        k = cfg.experts_per_token
+        flat_e = idx.reshape(-1)
+        order = jnp.argsort(flat_e)
+        tok = (jnp.arange(t * k) // k)[order]
+        e_sorted = flat_e[order]
+        starts = jnp.searchsorted(e_sorted, jnp.arange(cfg.num_experts))
+        slot = jnp.arange(t * k) - starts[e_sorted]
+        keep = slot < cap
+        slot_c = jnp.where(keep, slot, 0)
+
+        # pack (E, cap, d) send buffer, grouped by destination device
+        buf = jnp.zeros((cfg.num_experts, cap, d), x_loc.dtype)
+        rows = jnp.where(keep[:, None], x2d[tok], 0).astype(x_loc.dtype)
+        buf = buf.at[e_sorted, slot_c].add(rows)
+        send = buf.reshape(n_model, e_loc, cap, d)
+
+        # exchange over the expert-owner axis
+        recv = jax.lax.all_to_all(send, "model", split_axis=0, concat_axis=0,
+                                  tiled=False)
+        # recv: (n_model, e_loc, cap, d) — tokens from every source device
+        xe = recv.transpose(1, 0, 2, 3).reshape(e_loc, n_model * cap, d)
+        ye = expert_ffn(xe, {"wi": wi, "wg": wg, "wo": wo}, cfg)
+        ye = ye.reshape(e_loc, n_model, cap, d).transpose(1, 0, 2, 3)
+        back = jax.lax.all_to_all(ye, "model", split_axis=0, concat_axis=0,
+                                  tiled=False)
+        ye_full = back.reshape(cfg.num_experts, cap, d)
+
+        g_sorted = gates.reshape(-1)[order]
+        out_rows = ye_full[e_sorted, slot_c] * jnp.where(
+            keep, g_sorted, 0.0)[:, None].astype(x_loc.dtype)
+        out = jnp.zeros((t, d), x_loc.dtype).at[tok].add(out_rows)
+        if cfg.num_shared_experts > 0:
+            out = out + _shared(x2d, shared_p, cfg)
+        aux = jax.lax.pmean(aux, mesh.axis_names)
+        return out.reshape(b, s, d), aux
+
+    wi, wg, wo = (p["experts"][k] for k in ("wi", "wg", "wo"))
+    expert_spec = P("model", None, None)
+    shared_p = p.get("shared")
+    shared_spec = (jax.tree.map(lambda _: P(None, None), shared_p)
+                   if shared_p is not None else None)
+
+    out, aux = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(in_spec, P(None, None), expert_spec, expert_spec,
+                  expert_spec, shared_spec),
+        out_specs=(in_spec, P()),
+        check_vma=False,
+    )(x, p["router"], wi, wg, wo, shared_p)
+    return out, aux

@@ -1,0 +1,76 @@
+"""Decomposed collective-matmul (Wang et al. [66], paper §5.1): overlap
+communication with dependent computation.
+
+A TP matmul  y = x @ W  with x sharded over `axis` on its contraction-free
+dim normally lowers to  all-gather(x) -> dot.  The decomposition instead
+runs a ring: at each of the N steps, compute the partial dot for the shard
+currently held while collective-permuting the next shard — the transfer of
+chunk i+1 hides behind the matmul of chunk i.  On TPU the ICI ring makes
+this latency-optimal; XLA's own async all-gather achieves partial overlap,
+and this manual schedule is the structural ceiling (the paper's reported
+1.38x throughput / 72% FLOPS-util on 1024 chips for a 500B model).
+
+``ring_allgather_matmul`` is numerically identical to the plain lowering
+(tests assert allclose); the roofline benchmark measures exposed vs hidden
+collective bytes in the compiled HLO.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def ring_allgather_matmul(x, w, mesh: Mesh, axis: str = "model"):
+    """y = x @ w — classic collective matmul.
+
+    x: (m, k) row-sharded P(axis, None); w: (k, n) column-sharded
+    P(None, axis).  The plain lowering all-gathers x, then dots with the
+    local w column block.  Here, each device instead walks the ring: at step
+    i it dots the x block it currently holds (filling those output rows)
+    while collective-permuting the block onward — the transfer of block i+1
+    hides behind the matmul of block i.  Per-device compute is identical to
+    the plain lowering (m x k x n/n_dev); only the gather is decomposed.
+
+    Returns (m, n) with columns sharded over `axis`.
+    """
+    n_dev = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+
+    def local(xs, wl):
+        # xs: (m/n_dev, k) this device's row block; wl: (k, n/n_dev)
+        idx = jax.lax.axis_index(axis)
+        fwd = [(i, (i + 1) % n_dev) for i in range(n_dev)]
+        m_loc = xs.shape[0]
+
+        def step(i, carry):
+            block, acc = carry
+            part = jnp.einsum("mk,kn->mn", block, wl,
+                              preferred_element_type=jnp.float32
+                              ).astype(block.dtype)
+            src = (idx - i) % n_dev     # owner of the block just consumed
+            acc = jax.lax.dynamic_update_slice_in_dim(
+                acc, part, src * m_loc, axis=0)
+            block = jax.lax.ppermute(block, axis, fwd)
+            return block, acc
+
+        acc0 = jnp.zeros((m_loc * n_dev, wl.shape[1]), xs.dtype)
+        _, acc = jax.lax.fori_loop(0, n_dev, step, (xs, acc0))
+        return acc
+
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axis, None), P(None, axis)),
+        out_specs=P(None, axis),
+        check_vma=False,
+    )(x, w)
+
+
+def plain_allgather_matmul(x, w, mesh: Mesh, axis: str = "model"):
+    """Reference lowering: blocking all-gather(x) then dot with local w."""
+    xs = jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(axis, None)))
+    ws = jax.lax.with_sharding_constraint(w, NamedSharding(mesh, P(None, axis)))
+    y = jnp.einsum("mk,kn->mn", xs, ws.astype(xs.dtype),
+                   preferred_element_type=jnp.float32).astype(xs.dtype)
+    return jax.lax.with_sharding_constraint(y, NamedSharding(mesh, P(None, axis)))

@@ -1,0 +1,157 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Every parameter carries logical axis names (repro.models.init.ParamSpec).
+A rule table maps logical names to mesh axes; any assignment that does not
+divide evenly falls back to replication for that dim (uneven shards are a
+perf cliff on TPU, not a correctness feature we want silently).
+
+Default rules implement FSDP ("embed" on data) x TP ("ffn"/"heads"/"vocab"
+on model) with expert parallelism on "experts" when divisible.  Per-arch
+overrides are applied by the launcher (see repro.launch.strategy).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.init import ParamSpec, spec_tree
+
+PyTree = Any
+
+# logical axis -> candidate mesh axes (first that divides wins; () = replicate)
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    "vocab": ("model",),
+    "embed": ("data",),          # FSDP/ZeRO: weights gathered per-layer
+    "ffn": ("model",),           # TP
+    "heads": ("model",),
+    "kv": ("model",),
+    "experts": ("model",),       # EP when num_experts % model == 0
+    "experts_r": (),             # router output dim: tiny, replicate
+    "rnn": ("model",),
+    "rnn_in": ("data",),
+    "pos": (),
+    "layers": (),
+    "vec": (),
+    "embed_v": (),
+    "vec2": (),
+}
+
+
+def axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def spec_to_pspec(spec: ParamSpec, mesh: Mesh,
+                  rules: Optional[Dict[str, Tuple[str, ...]]] = None) -> P:
+    rules = rules or DEFAULT_RULES
+    parts = []
+    used = set()
+    for dim, logical in zip(spec.shape, spec.axes):
+        choice = None
+        for cand in rules.get(logical, ()):
+            if cand in mesh.axis_names and cand not in used \
+                    and dim % axis_size(mesh, cand) == 0 \
+                    and axis_size(mesh, cand) > 1:
+                choice = cand
+                break
+        if choice:
+            used.add(choice)
+        parts.append(choice)
+    return P(*parts)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh,
+                    rules: Optional[Dict[str, Tuple[str, ...]]] = None) -> PyTree:
+    """NamedSharding pytree matching init_params/abstract_params layout."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, spec_to_pspec(s, mesh, rules)),
+        spec_tree(cfg),
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def param_pspecs(cfg: ModelConfig, mesh: Mesh, rules=None) -> PyTree:
+    return jax.tree.map(
+        lambda s: spec_to_pspec(s, mesh, rules),
+        spec_tree(cfg),
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def sharded_param_bytes(cfg: ModelConfig, mesh: Mesh, rules=None) -> int:
+    """Per-device parameter bytes under the rule table (for memory budgets)."""
+    total = 0
+    flat = jax.tree.leaves(spec_tree(cfg),
+                           is_leaf=lambda x: isinstance(x, ParamSpec))
+    for s in flat:
+        pspec = spec_to_pspec(s, mesh, rules)
+        shard_elems = math.prod(s.shape)
+        for dim, part in zip(s.shape, pspec):
+            if part:
+                shard_elems //= axis_size(mesh, part)
+        total += shard_elems * jax.dtypes.canonicalize_dtype(s.dtype).itemsize
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Input/cache shardings for the step functions
+# ---------------------------------------------------------------------------
+
+def batch_pspecs(cfg: ModelConfig, batch_tree, mesh: Mesh) -> PyTree:
+    """Shard model inputs: batch dim over (pod, data)."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def spec_for(leaf):
+        if leaf.ndim == 0:
+            return P()
+        if leaf.shape[0] == 1:   # batch-1 (long-context decode): replicate
+            return P(*([None] * leaf.ndim))
+        return P(dp, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree.map(spec_for, batch_tree,
+                        is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def cache_pspecs(cfg: ModelConfig, cache_tree, mesh: Mesh) -> PyTree:
+    """Decode-cache sharding: batch over (pod, data), kv seq over model.
+
+    Cache leaves (stacked): (L, b, S, hkv, hd); unstacked: (b, S, hkv, hd);
+    recurrent states: (b, ...) / (L, b, ...).  Sequence-sharding the cache
+    keeps per-device HBM bounded at 32k/500k depths; attention over the
+    sharded seq produces partial softmax sums that GSPMD turns into a small
+    logits all-gather + output reduce (see DESIGN.md §6).
+    """
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_size = math.prod(axis_size(mesh, a) for a in dp_axes) if dp_axes else 1
+    dp = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
+    model_ax = "model" if "model" in mesh.axis_names else None
+    msize = axis_size(mesh, "model") if model_ax else 1
+
+    def spec_for(path, leaf):
+        names = [str(getattr(p, "key", getattr(p, "name", ""))) for p in path]
+        if leaf.ndim == 0:
+            return P()
+        stacked = "blocks" in names           # scan stacks carry leading L
+        kv_like = names and names[-1] in ("k", "v")
+        parts = [None] * leaf.ndim
+        if kv_like:
+            b_dim = 1 if stacked else 0
+            s_dim = b_dim + 1
+            if dp and leaf.shape[b_dim] % dp_size == 0 and leaf.shape[b_dim] > 1:
+                parts[b_dim] = dp
+            if model_ax and leaf.shape[s_dim] % msize == 0 and msize > 1:
+                parts[s_dim] = model_ax
+            return P(*parts)
+        # recurrent / misc states (rwkv s, conv, enc_out, last): shard batch
+        b_dim = 1 if (stacked and leaf.ndim >= 2) else 0
+        if dp and leaf.ndim > b_dim and leaf.shape[b_dim] % dp_size == 0 \
+                and leaf.shape[b_dim] > 1:
+            parts[b_dim] = dp
+        return P(*parts)
+
+    return jax.tree.map_with_path(spec_for, cache_tree)

@@ -1,0 +1,2 @@
+from repro.runtime.checkpoint import CheckpointManager  # noqa: F401
+from repro.runtime.orchestrator import Orchestrator, RunConfig  # noqa: F401

@@ -1,0 +1,67 @@
+"""Ahead-of-time compilation cache (paper §5.2: "compile on cheap hardware,
+store, and skip JIT on the accelerators").
+
+Two layers:
+  * jax's persistent compilation cache (XLA executable serialization) —
+    enabled per-process against a shared directory;
+  * an in-process AOT registry keyed by (arch, shape, mesh, donation
+    signature) holding `Lowered`/`Compiled` objects so repeated launches
+    within one controller reuse executables.
+
+`CompileClock` records compile wall-time per key; the Runtime-Goodput
+benchmark (fig14) uses it to quantify the INIT-time saving of a warm cache.
+"""
+from __future__ import annotations
+
+import pathlib
+import time
+from typing import Any, Callable, Dict, Hashable, Tuple
+
+import jax
+
+_CACHE_ENABLED = False
+
+
+def enable_persistent_cache(directory: str) -> None:
+    """Turn on XLA's on-disk executable cache (idempotent)."""
+    global _CACHE_ENABLED
+    pathlib.Path(directory).mkdir(parents=True, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", directory)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    _CACHE_ENABLED = True
+
+
+class CompileClock:
+    def __init__(self):
+        self.events: Dict[Hashable, Dict[str, float]] = {}
+
+    def record(self, key: Hashable, seconds: float, hit: bool):
+        self.events[key] = {"seconds": seconds, "hit": float(hit)}
+
+    @property
+    def total_compile_s(self) -> float:
+        return sum(e["seconds"] for e in self.events.values())
+
+
+class AotCache:
+    """In-process executable registry with compile-time accounting."""
+
+    def __init__(self):
+        self._store: Dict[Hashable, Any] = {}
+        self.clock = CompileClock()
+
+    def get_or_compile(self, key: Hashable,
+                       build: Callable[[], Tuple[Any, tuple]]) -> Any:
+        """build() -> (jitted_fn, abstract_args); returns Compiled."""
+        if key in self._store:
+            self.clock.record(key, 0.0, hit=True)
+            return self._store[key]
+        t0 = time.monotonic()
+        fn, args = build()
+        compiled = fn.lower(*args).compile()
+        self.clock.record(key, time.monotonic() - t0, hit=False)
+        self._store[key] = compiled
+        return compiled
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._store

@@ -1,0 +1,149 @@
+"""Training orchestrator: the runtime layer of the stack (paper §3.3),
+instrumented so every second of chip time lands in an MPG Interval ledger.
+
+Responsibilities: program setup (AOT cache), data feeding (prefetch
+pipeline), stepping, checkpoint creation (sync or async), preemption/
+failure recovery (restart resumes from the newest committed checkpoint and
+books the rolled-back work as LOST — the paper's RG definition).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core.goodput import Interval, Phase
+from repro.data.pipeline import DataPipeline
+from repro.models import model
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig
+from repro.runtime.checkpoint import CheckpointManager
+from repro.runtime.compile_cache import AotCache
+
+
+@dataclasses.dataclass
+class RunConfig:
+    steps: int = 50
+    batch: int = 4
+    seq: int = 64
+    checkpoint_every: int = 10
+    async_checkpoint: bool = False
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    preempt_at_step: Optional[int] = None   # simulate a mid-run preemption
+    job_id: str = "job0"
+    chips: int = 1
+
+
+class Orchestrator:
+    def __init__(self, cfg: ModelConfig, run: RunConfig,
+                 aot: Optional[AotCache] = None):
+        self.cfg = cfg
+        self.run_cfg = run
+        self.aot = aot or AotCache()
+        self.intervals: List[Interval] = []
+        self.ckpt = CheckpointManager(run.ckpt_dir, keep=run.keep,
+                                      async_mode=run.async_checkpoint)
+        self.state = None
+        self.step_times: List[float] = []
+
+    # ------------------------------------------------------------------
+    def _emit(self, phase: Phase, t0: float, t1: float):
+        r = self.run_cfg
+        self.intervals.append(Interval(
+            job_id=r.job_id, phase=phase, t0=t0, t1=t1, chips=r.chips,
+            segment={"arch": self.cfg.name,
+                     "ckpt": "async" if r.async_checkpoint else "sync"}))
+
+    # ------------------------------------------------------------------
+    def _build(self):
+        from repro.launch.strategy import make_train_step, abstract_train_state
+
+        cfg, r = self.cfg, self.run_cfg
+        step_fn = make_train_step(cfg, AdamWConfig(lr=1e-3))
+        from repro.models.config import ShapeConfig
+
+        shape = ShapeConfig("orc", "train", r.seq, r.batch)
+        batch_abs = model.input_specs(cfg, shape)
+
+        def build():
+            return jax.jit(step_fn, donate_argnums=(0,)), \
+                (abstract_train_state(cfg), batch_abs)
+
+        key = (cfg.name, r.batch, r.seq, "train")
+        return self.aot.get_or_compile(key, build)
+
+    def _init_state(self):
+        from repro.optim import adamw_init
+
+        params = model.init_params(self.cfg, jax.random.key(0))
+        return {"params": params, "opt": adamw_init(params)}
+
+    # ------------------------------------------------------------------
+    def run(self) -> Dict[str, Any]:
+        """Run (or resume) the job; returns summary metrics."""
+        r = self.run_cfg
+        t_init0 = time.monotonic()
+        compiled = self._build()
+        example = self._init_state()
+        restored, ckpt_step = self.ckpt.restore(example)
+        start_step = ckpt_step + 1 if restored is not None else 0
+        self.state = restored if restored is not None else example
+        pipeline = DataPipeline(self.cfg.vocab_size, r.batch, r.seq,
+                                seed=start_step).start()
+        t_init1 = time.monotonic()
+        self._emit(Phase.INIT, t_init0, t_init1)
+
+        last_ckpt_step = start_step - 1
+        losses = []
+        preempted = False
+        step = start_step
+        try:
+            for step in range(start_step, r.steps):
+                if r.preempt_at_step is not None and step == r.preempt_at_step:
+                    preempted = True
+                    break
+                t0 = time.monotonic()
+                batch = next(pipeline)
+                t1 = time.monotonic()
+                if t1 - t0 > 1e-4:
+                    self._emit(Phase.DATA_STALL, t0, t1)
+                batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+                self.state, metrics = compiled(self.state, batch)
+                loss = float(metrics["loss"])
+                t2 = time.monotonic()
+                self._emit(Phase.STEP, t1, t2)
+                self.step_times.append(t2 - t1)
+                losses.append(loss)
+                if (step + 1) % r.checkpoint_every == 0:
+                    t3 = time.monotonic()
+                    self.ckpt.save(self.state, step)
+                    t4 = time.monotonic()
+                    self._emit(Phase.CHECKPOINT, t3, t4)
+                    last_ckpt_step = step
+        finally:
+            pipeline.stop()
+
+        if preempted:
+            # roll back: work after the last committed checkpoint is LOST
+            lost_steps = step - 1 - last_ckpt_step
+            if lost_steps > 0 and self.step_times:
+                avg = float(np.mean(self.step_times))
+                t = time.monotonic()
+                self._emit(Phase.LOST, t, t + lost_steps * avg)
+        else:
+            self.ckpt.save(self.state, r.steps - 1)
+            self.ckpt.wait()
+        self.ckpt.wait()
+
+        return {
+            "start_step": start_step,
+            "end_step": step if preempted else r.steps,
+            "preempted": preempted,
+            "losses": losses,
+            "ckpt_metrics": dict(self.ckpt.metrics),
+            "compile_s": self.aot.clock.total_compile_s,
+        }

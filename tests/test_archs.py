@@ -1,0 +1,83 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward /
+train step on CPU, asserting output shapes and no NaNs (deliverable f)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke
+from repro.models import model
+from repro.models.config import ModelConfig, ShapeConfig, SHAPES, shape_applicable
+
+
+SMOKE_SHAPE = ShapeConfig("smoke", "train", 32, 2)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_smoke(arch):
+    cfg = get_smoke(arch)
+    params = model.init_params(cfg, jax.random.key(0))
+    batch = model.synthetic_batch(cfg, SMOKE_SHAPE, jax.random.key(1))
+
+    def step(p, b):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss_fn(cfg), has_aux=True)(p, b)
+        return loss, metrics, grads
+
+    loss, metrics, grads = jax.jit(step)(params, batch)
+    assert loss.shape == ()
+    assert jnp.isfinite(loss), f"{arch}: non-finite loss"
+    gnorm = jax.tree.reduce(
+        lambda a, g: a + jnp.sum(jnp.square(g.astype(jnp.float32))),
+        grads, jnp.zeros(()))
+    assert jnp.isfinite(gnorm), f"{arch}: non-finite grads"
+    assert float(gnorm) > 0, f"{arch}: zero grads"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_smoke(arch):
+    cfg = get_smoke(arch)
+    params = model.init_params(cfg, jax.random.key(0))
+    batch = model.synthetic_batch(cfg, SMOKE_SHAPE, jax.random.key(1))
+    logits, cache = jax.jit(model.prefill_fn(cfg))(params, batch)
+    assert logits.shape == (2, cfg.vocab_size)
+    assert jnp.isfinite(logits).all()
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    logits2, cache2 = jax.jit(model.decode_fn(cfg))(params, tok, cache)
+    assert logits2.shape == (2, cfg.vocab_size)
+    assert jnp.isfinite(logits2).all()
+    assert int(cache2["pos"]) == int(cache["pos"]) + 1
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_exact(arch):
+    """The full config matches the published numbers (no allocation)."""
+    cfg = get_config(arch)
+    published = {
+        "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+        "deepseek-moe-16b": (28, 2048, 16, 16, 1408, 102400),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+        "smollm-135m": (30, 576, 9, 3, 1536, 49152),
+        "qwen2.5-14b": (48, 5120, 40, 8, 13824, 152064),
+        "qwen2-72b": (80, 8192, 64, 8, 29568, 152064),
+        "granite-3-8b": (40, 4096, 32, 8, 12800, 49155),
+        "rwkv6-3b": (32, 2560, 1, 1, 8960, 65536),
+        "llava-next-mistral-7b": (32, 4096, 32, 8, 14336, 32000),
+        "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == published, f"{arch}: {got} != {published}"
+
+
+def test_long_500k_applicability():
+    """Sub-quadratic archs (and only those) run the long_500k cell."""
+    runs = {a for a in ARCH_IDS
+            if shape_applicable(get_config(a),
+                                [s for s in SHAPES if s.name == "long_500k"][0])[0]}
+    assert runs == {"mixtral-8x7b", "recurrentgemma-2b", "rwkv6-3b"}
+
+
+@pytest.mark.parametrize("arch", ["mixtral-8x7b", "deepseek-moe-16b"])
+def test_moe_active_params_fraction(arch):
+    cfg = get_config(arch)
+    assert cfg.num_active_params() < 0.5 * cfg.num_params()

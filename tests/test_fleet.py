@@ -1,0 +1,139 @@
+"""Fleet simulator tests: buddy-allocator invariants (hypothesis),
+scheduler behaviour, and paper-shape reproductions (SG>95%, U-shaped SG)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.goodput import compute_goodput, segment_goodput
+from repro.fleet.cluster import Cluster, _BuddyPod
+from repro.fleet.job import JobSpec
+from repro.fleet.sim import FleetSim, SimConfig
+from repro.fleet.workload import generate_jobs
+
+
+# ---------------------------------------------------------------------------
+# buddy allocator
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.sampled_from([1, 2, 4, 8, 16, 32, 64]), min_size=1,
+                max_size=40))
+def test_buddy_alloc_release_conserves(sizes):
+    pod = _BuddyPod(0, 256)
+    offs = []
+    for i, s in enumerate(sizes):
+        off = pod.alloc(s)
+        if off is not None:
+            offs.append((off, s))
+    for off, s in offs:
+        pod.release(off)
+    assert pod.free_chips() == 256
+    assert pod.largest_slice() == 256  # fully coalesced
+
+
+def test_buddy_no_overlap():
+    pod = _BuddyPod(0, 64)
+    seen = set()
+    for s in [16, 8, 8, 4, 16, 4, 8]:
+        off = pod.alloc(s)
+        assert off is not None
+        span = set(range(off, off + s))
+        assert not span & seen
+        seen |= span
+
+
+def test_cluster_fragmentation_rejects_topology():
+    """Paper Myth 1: free chips != schedulable slice."""
+    c = Cluster(n_pods=1, pod_size=16)
+    a = c.alloc("a", 4)
+    b = c.alloc("b", 4)
+    d = c.alloc("d", 4)
+    assert c.free_chips() == 4
+    c.release("b")
+    assert c.free_chips() == 8      # 8 free chips...
+    assert not c.can_fit(8)         # ...but no contiguous 8-slice
+    assert c.can_fit(4)
+
+
+def test_multipod_alloc():
+    c = Cluster(n_pods=4, pod_size=64)
+    assert c.alloc("xl", 128) is not None      # 2 whole pods
+    assert c.alloc("xl2", 192) is None         # needs 3 pods, only 2 left
+    c.release("xl")
+    assert c.alloc("xl3", 128) is not None
+
+
+# ---------------------------------------------------------------------------
+# simulator
+# ---------------------------------------------------------------------------
+
+def _run(seed=0, **kw):
+    cfg = SimConfig(n_pods=8, pod_size=256, horizon=3 * 24 * 3600,
+                    seed=seed, **kw)
+    sim = FleetSim(cfg)
+    for j in generate_jobs(150, cfg.horizon, seed=seed, pg_table={},
+                           capacity_chips=cfg.n_pods * cfg.pod_size,
+                           target_load=0.6):
+        sim.submit(j)
+    return sim.run()
+
+
+def test_sim_chip_time_conservation():
+    sim = _run()
+    for ivl in sim.intervals:
+        assert ivl.t1 >= ivl.t0
+        assert ivl.chips > 0
+    # queued/partial are waiting states, not physical chip occupancy
+    total_alloc = sum(i.chip_time for i in sim.intervals
+                      if i.phase.value not in ("queued", "partial"))
+    assert total_alloc <= sim.capacity_chip_time * 1.001
+
+
+def test_sim_work_credited_only_once():
+    sim = _run()
+    for j, job in sim.jobs.items():
+        assert job.checkpointed <= job.spec.work + 1e-6
+
+
+def test_sg_by_size_u_shape():
+    """Paper Fig 16: XL jobs see the best scheduling goodput (the
+    preemption policy protects them); per-class SG counts gang assembly
+    and restart gaps (PARTIAL), not initial queueing (see fig16 bench)."""
+    sim = _run(seed=3)
+    from collections import defaultdict
+
+    partial = defaultdict(float)
+    alloc = defaultdict(float)
+    for ivl in sim.intervals:
+        sc = ivl.segment["size_class"]
+        if ivl.phase.value == "partial":
+            partial[sc] += ivl.chip_time
+        elif ivl.phase.value != "queued":
+            alloc[sc] += ivl.chip_time
+    sg = {s: alloc[s] / (alloc[s] + partial[s])
+          for s in alloc if alloc[s] + partial[s] > 0}
+    if "xl" in sg and "medium" in sg:
+        assert sg["xl"] >= sg["medium"] - 0.05
+
+
+def test_preemption_protects_xl():
+    sim = _run(seed=5)
+    by_class = {}
+    for j, job in sim.jobs.items():
+        sc = job.spec.size_class
+        by_class.setdefault(sc, []).append(job.preemptions)
+    if "xl" in by_class:
+        assert sum(by_class["xl"]) == 0   # policy: never evict XL
+
+
+def test_async_checkpoint_improves_rg():
+    """Paper §5.2: async checkpointing raises fleet RG."""
+    def rg(async_ckpt):
+        cfg = SimConfig(n_pods=4, pod_size=256, horizon=3 * 24 * 3600, seed=7)
+        sim = FleetSim(cfg)
+        for j in generate_jobs(150, cfg.horizon, seed=7,
+                               async_checkpoint=async_ckpt, pg_table={}):
+            sim.submit(j)
+        sim.run()
+        return compute_goodput(sim.intervals, sim.capacity_chip_time).rg
+
+    assert rg(True) > rg(False)

@@ -1,0 +1,179 @@
+"""Pallas kernel validation: shape/dtype sweeps in interpret mode against
+pure-jnp (or fp64 numpy) oracles (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.ops import flash_attention_bshd
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.moe_gmm.ops import moe_gmm
+from repro.kernels.moe_gmm.ref import moe_gmm_ref
+from repro.kernels.rglru_scan.ops import rglru_scan
+from repro.kernels.rglru_scan.ref import rglru_scan_ref
+from repro.kernels.rwkv6_wkv.ops import rwkv6_wkv
+from repro.kernels.rwkv6_wkv.ref import wkv_ref
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,hq,hkv,s,d", [
+    (2, 4, 2, 64, 32), (1, 8, 1, 128, 16), (2, 2, 2, 32, 64),
+    (1, 6, 3, 96, 32),
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 16), (False, 0)])
+def test_flash_attention_shapes(b, hq, hkv, s, d, causal, window):
+    ks = jax.random.split(jax.random.key(b * s + d), 3)
+    q = jax.random.normal(ks[0], (b, s, hq, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, hkv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, hkv, d), jnp.float32)
+    out = flash_attention_bshd(q, k, v, causal=causal, window=window,
+                               block_q=32, block_k=32, interpret=True)
+    ref = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3), causal=causal,
+                        window=window).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(out, ref, atol=3e-5)
+
+
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 3e-5),
+                                        (jnp.bfloat16, 3e-2)])
+def test_flash_attention_dtypes(dtype, atol):
+    ks = jax.random.split(jax.random.key(7), 3)
+    q = jax.random.normal(ks[0], (1, 64, 4, 32)).astype(dtype)
+    k = jax.random.normal(ks[1], (1, 64, 2, 32)).astype(dtype)
+    v = jax.random.normal(ks[2], (1, 64, 2, 32)).astype(dtype)
+    out = flash_attention_bshd(q, k, v, block_q=32, block_k=32,
+                               interpret=True)
+    ref = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(out.astype(np.float32),
+                               ref.astype(np.float32), atol=atol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(bq=st.sampled_from([16, 32, 64]), bk=st.sampled_from([16, 32, 64]),
+       window=st.sampled_from([0, 8, 24, 100]))
+def test_flash_attention_block_invariance(bq, bk, window):
+    """Property: output is independent of kernel block sizes."""
+    ks = jax.random.split(jax.random.key(99), 3)
+    q = jax.random.normal(ks[0], (1, 64, 2, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 64, 2, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 64, 2, 16), jnp.float32)
+    out = flash_attention_bshd(q, k, v, window=window, block_q=bq,
+                               block_k=bk, interpret=True)
+    base = flash_attention_bshd(q, k, v, window=window, block_q=64,
+                                block_k=64, interpret=True)
+    np.testing.assert_allclose(out, base, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,c,bs_,bc", [
+    (2, 64, 32, 16, 16), (1, 128, 64, 32, 32), (3, 96, 48, 96, 16),
+    (1, 256, 128, 64, 128),
+])
+def test_rglru_scan_shapes(b, s, c, bs_, bc):
+    ks = jax.random.split(jax.random.key(s + c), 2)
+    a = jax.random.uniform(ks[0], (b, s, c), minval=0.85, maxval=0.999)
+    x = jax.random.normal(ks[1], (b, s, c)) * 0.1
+    out = rglru_scan(a, x, block_s=bs_, block_c=bc, interpret=True)
+    np.testing.assert_allclose(out, rglru_scan_ref(a, x), atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_rglru_scan_property(seed):
+    """Property: result equals the sequential recurrence for random inputs."""
+    ks = jax.random.split(jax.random.key(seed), 2)
+    a = jax.random.uniform(ks[0], (1, 32, 16), minval=0.0, maxval=1.0)
+    x = jax.random.normal(ks[1], (1, 32, 16))
+    out = rglru_scan(a, x, block_s=8, block_c=8, interpret=True)
+    h = np.zeros((1, 16))
+    want = np.zeros((1, 32, 16))
+    an, xn = np.asarray(a), np.asarray(x)
+    for t in range(32):
+        h = an[:, t] * h + xn[:, t]
+        want[:, t] = h
+    np.testing.assert_allclose(out, want, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 WKV
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,s,n,chunk", [
+    (1, 2, 32, 16, 8), (2, 1, 64, 32, 16), (1, 3, 48, 16, 48),
+    (1, 1, 128, 64, 32),
+])
+def test_rwkv6_wkv_shapes(b, h, s, n, chunk):
+    ks = jax.random.split(jax.random.key(s + n), 5)
+    r = jax.random.normal(ks[0], (b, h, s, n)) * 0.5
+    k = jax.random.normal(ks[1], (b, h, s, n)) * 0.5
+    v = jax.random.normal(ks[2], (b, h, s, n)) * 0.5
+    logw = -jnp.exp(jax.random.normal(ks[3], (b, h, s, n)) * 0.5)
+    u = jax.random.normal(ks[4], (h, n)) * 0.5
+    out = rwkv6_wkv(r, k, v, logw, u, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(out, wkv_ref(r, k, v, logw, u), atol=2e-4)
+
+
+def test_rwkv6_wkv_chunk_invariance():
+    ks = jax.random.split(jax.random.key(3), 5)
+    shp = (1, 2, 64, 16)
+    r, k, v = (jax.random.normal(ks[i], shp) * 0.5 for i in range(3))
+    logw = -jnp.exp(jax.random.normal(ks[3], shp) * 0.5)
+    u = jax.random.normal(ks[4], (2, 16)) * 0.5
+    outs = [rwkv6_wkv(r, k, v, logw, u, chunk=c, interpret=True)
+            for c in (8, 16, 32, 64)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=2e-4)
+
+
+def test_rwkv6_matches_model_chunked():
+    """Kernel semantics == the model's XLA chunked path."""
+    from repro.models.rwkv import wkv_chunked
+
+    ks = jax.random.split(jax.random.key(5), 5)
+    b, h, s, n = 2, 2, 64, 16
+    r, k, v = (jax.random.normal(ks[i], (b, s, h, n)) * 0.5 for i in range(3))
+    logw = -jnp.exp(jax.random.normal(ks[3], (b, s, h, n)) * 0.5)
+    u = jax.random.normal(ks[4], (h, n)) * 0.5
+    state = jnp.zeros((b, h, n, n))
+    o_model, _ = wkv_chunked(r, k, v, logw, u, state, chunk=16)
+    o_kernel = rwkv6_wkv(r.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                         v.transpose(0, 2, 1, 3), logw.transpose(0, 2, 1, 3),
+                         u, chunk=16, interpret=True).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(o_kernel, o_model, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# MoE grouped matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("e,c,d,f", [
+    (4, 32, 64, 48), (2, 64, 128, 64), (8, 16, 32, 32), (1, 128, 256, 128),
+])
+def test_moe_gmm_shapes(e, c, d, f):
+    ks = jax.random.split(jax.random.key(e * c), 2)
+    x = jax.random.normal(ks[0], (e, c, d))
+    w = jax.random.normal(ks[1], (e, d, f)) / np.sqrt(d)
+    out = moe_gmm(x, w, block_c=16, block_f=16, block_k=32, interpret=True)
+    np.testing.assert_allclose(out, moe_gmm_ref(x, w), atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 1e-4),
+                                        (jnp.bfloat16, 5e-2)])
+def test_moe_gmm_dtypes(dtype, atol):
+    ks = jax.random.split(jax.random.key(11), 2)
+    x = jax.random.normal(ks[0], (2, 32, 64)).astype(dtype)
+    w = (jax.random.normal(ks[1], (2, 64, 32)) / 8).astype(dtype)
+    out = moe_gmm(x, w, block_c=16, block_f=16, block_k=32, interpret=True)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(out.astype(np.float32),
+                               moe_gmm_ref(x, w).astype(np.float32),
+                               atol=atol)

@@ -1,0 +1,56 @@
+"""Roofline math + analytic FLOPS model unit tests."""
+import pytest
+
+from repro.configs import get_config
+from repro.core.flops import model_flops
+from repro.core.hardware import TPU_V5E, ideal_step_time
+from repro.core.roofline import RooflineCell, fit_poly_and_eval
+from repro.models.config import SHAPES_BY_NAME
+
+
+def test_roofline_terms_and_dominance():
+    cell = RooflineCell(
+        arch="x", shape="train_4k", mesh="16x16", chips=256,
+        hlo_flops=256 * 197e12 * 1.0,          # exactly 1 s of compute
+        hlo_bytes=256 * 819e9 * 0.5,           # 0.5 s of memory
+        collective_bytes_per_chip=50e9 * 2.0,  # 2 s of collectives
+        model_flops=256 * 197e12 * 0.7,
+    )
+    assert cell.t_compute == pytest.approx(1.0)
+    assert cell.t_memory == pytest.approx(0.5)
+    assert cell.t_collective == pytest.approx(2.0)
+    assert cell.dominant == "collective"
+    assert cell.t_lower_bound == pytest.approx(2.0)
+    assert cell.t_no_overlap == pytest.approx(3.5)
+    assert cell.useful_ratio == pytest.approx(0.7)
+    assert cell.pg_optimistic == pytest.approx(0.7 / 2.0)
+
+
+def test_model_flops_moe_uses_active_params():
+    mix = get_config("mixtral-8x7b")
+    shape = SHAPES_BY_NAME["train_4k"]
+    mf = model_flops(mix, shape)
+    assert mf == pytest.approx(6.0 * mix.num_active_params() * shape.tokens)
+    assert mf < 6.0 * mix.num_params() * shape.tokens * 0.5
+
+
+def test_model_flops_decode_counts_batch_tokens():
+    cfg = get_config("granite-3-8b")
+    d = SHAPES_BY_NAME["decode_32k"]
+    assert model_flops(cfg, d) == pytest.approx(
+        2.0 * cfg.num_active_params() * 128)
+
+
+def test_ideal_step_time_is_paper_pg_numerator():
+    assert ideal_step_time(197e12 * 256, 256) == pytest.approx(1.0)
+
+
+def test_poly_fit_exact_for_quadratic():
+    f = lambda x: 3.0 + 2.0 * x + 0.5 * x * x  # noqa: E731
+    xs = [2, 4, 6]
+    assert fit_poly_and_eval(xs, [f(x) for x in xs], 80) == pytest.approx(f(80))
+
+
+def test_poly_fit_linear_with_two_points():
+    f = lambda x: 7.0 + 3.0 * x  # noqa: E731
+    assert fit_poly_and_eval([1, 2], [f(1), f(2)], 256) == pytest.approx(f(256))
