@@ -12,13 +12,14 @@ exactly like the paper's figure.
 from __future__ import annotations
 
 from benchmarks.common import emit, save_json, timed
-from repro.core.goodput import compute_goodput
 from repro.fleet.sim import FleetSim, SimConfig
 from repro.fleet.workload import generate_jobs
 
 
 def fleet_rg(seed, *, async_ckpt=False, cache=False, pathways_frac=0.7):
-    cfg = SimConfig(n_pods=8, pod_size=256, horizon=30 * 24 * 3600, seed=seed)
+    # month-long sims: stream into the ledger, never keep the interval list
+    cfg = SimConfig(n_pods=8, pod_size=256, horizon=30 * 24 * 3600,
+                    seed=seed, retain_intervals=False)
     sim = FleetSim(cfg)
     for j in generate_jobs(300, cfg.horizon, seed=seed,
                            async_checkpoint=async_ckpt, compile_cache=cache,
@@ -26,8 +27,7 @@ def fleet_rg(seed, *, async_ckpt=False, cache=False, pathways_frac=0.7):
                            capacity_chips=cfg.n_pods * cfg.pod_size):
         sim.submit(j)
     sim.run()
-    return compute_goodput(sim.intervals, sim.capacity_chip_time,
-                           sim.pg_by_job()).rg
+    return sim.report().rg
 
 
 def run(seed: int = 14):

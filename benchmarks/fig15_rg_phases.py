@@ -9,7 +9,6 @@ from __future__ import annotations
 import dataclasses
 
 from benchmarks.common import emit, save_json, timed
-from repro.core.goodput import segment_goodput
 from repro.fleet.sim import FleetSim, SimConfig
 from repro.fleet.workload import generate_jobs
 
@@ -18,7 +17,8 @@ def run(seed: int = 15, months: int = 6):
     month = 30 * 24 * 3600.0
     series = {"train": [], "serve": [], "bulk_inference": []}
     for m in range(months):
-        cfg = SimConfig(n_pods=8, pod_size=256, horizon=month, seed=seed + m)
+        cfg = SimConfig(n_pods=8, pod_size=256, horizon=month,
+                        seed=seed + m, retain_intervals=False)
         sim = FleetSim(cfg)
         jobs = generate_jobs(300, cfg.horizon, seed=seed + m,
                              capacity_chips=cfg.n_pods * cfg.pod_size)
@@ -34,8 +34,8 @@ def run(seed: int = 15, months: int = 6):
             sim.submit(j)
         sim.run()
         cap = sim.capacity_chip_time
-        by = segment_goodput(sim.intervals, "phase_kind",
-                             {k: cap for k in series}, sim.pg_by_job())
+        by = sim.ledger.segment_report("phase_kind",
+                                       {k: cap for k in series})
         for k in series:
             series[k].append(round(by[k].rg, 4) if k in by else None)
     return {"rg_by_month": series}

@@ -1,8 +1,11 @@
-"""Paper Fig. 16: Scheduling Goodput by job size class.
+"""Paper Fig. 16: Scheduling Goodput by job size class, as a *policy sweep*.
 
 Claims reproduced: (1) overall SG > 95% with defragmentation + the
 preemption policy; (2) U-shape — XL (protected) and small (quick to place)
-jobs see the best SG, medium jobs absorb the evictions.
+jobs see the best SG, medium jobs absorb the evictions.  The ablations are
+scheduler policies injected through ``SimConfig`` (fleet.policies), not
+bool flags: the paper's best_fit/protect_xl/drain_for_xl combination is
+compared against naive placement, unprotected preemption, and no defrag.
 """
 from __future__ import annotations
 
@@ -12,9 +15,22 @@ from benchmarks.common import emit, save_json, timed
 from repro.fleet.sim import FleetSim, SimConfig
 from repro.fleet.workload import generate_jobs
 
+# (placement, preemption, defrag) policy combinations; first is the paper's
+POLICY_SWEEP = [
+    ("best_fit", "protect_xl", "drain_for_xl"),
+    ("best_fit", "priority_only", "drain_for_xl"),
+    ("first_fit", "protect_xl", "migrate_small"),
+    ("spread", "priority_only", "none"),
+    ("best_fit", "none", "drain_for_xl"),
+]
 
-def run(n_jobs: int = 500, seed: int = 16):
-    cfg = SimConfig(n_pods=16, pod_size=256, horizon=7 * 24 * 3600, seed=seed)
+
+def _one(n_jobs: int, seed: int, placement: str, preemption: str,
+         defrag: str):
+    cfg = SimConfig(n_pods=16, pod_size=256, horizon=7 * 24 * 3600,
+                    seed=seed, retain_intervals=False,
+                    placement=placement, preemption=preemption,
+                    defrag=defrag)
     sim = FleetSim(cfg)
     # moderate load so queueing reflects topology, not raw shortage
     # production fleets hold headroom for priority work (paper §3.2)
@@ -26,21 +42,30 @@ def run(n_jobs: int = 500, seed: int = 16):
 
     # Per paper §4.3: SG's numerator is "all-allocated" time; the per-class
     # losses are gang ASSEMBLY and preemption/failure RESTART gaps (PARTIAL),
-    # not the initial queue wait (that is a fleet-capacity matter).
+    # not the initial queue wait (that is a fleet-capacity matter).  The
+    # streaming ledger keeps per-class per-phase sums — no interval list.
     partial = defaultdict(float)
     alloc = defaultdict(float)
-    for iv in sim.intervals:
-        sc = iv.segment["size_class"]
-        if iv.phase.value == "partial":
-            partial[sc] += iv.chip_time
-        elif iv.phase.value != "queued":
-            alloc[sc] += iv.chip_time
+    for sc, sums in sim.ledger.segment_phase_chip_time("size_class").items():
+        partial[sc] = sums.get("partial", 0.0)
+        alloc[sc] = sum(ct for ph, ct in sums.items()
+                        if ph not in ("partial", "queued"))
     sg = {s: alloc[s] / (alloc[s] + partial[s])
           for s in sorted(alloc) if alloc[s] + partial[s] > 0}
-    overall = sum(alloc.values()) / (sum(alloc.values()) + sum(partial.values()))
+    overall = (sum(alloc.values())
+               / (sum(alloc.values()) + sum(partial.values())))
     return {"sg_by_size": {k: round(v, 4) for k, v in sg.items()},
             "sg_overall": round(overall, 4),
             "preemptions_by_size": _preemptions(sim)}
+
+
+def run(n_jobs: int = 500, seed: int = 16):
+    sweep = {}
+    for placement, preemption, defrag in POLICY_SWEEP:
+        name = f"{placement}+{preemption}+{defrag}"
+        sweep[name] = _one(n_jobs, seed, placement, preemption, defrag)
+    paper = sweep["best_fit+protect_xl+drain_for_xl"]
+    return {**paper, "policy_sweep": sweep}
 
 
 def _preemptions(sim):

@@ -3,21 +3,25 @@
 Each row is a fleet-simulator ablation (not hand-typed arithmetic):
   compiler row  -> all jobs' PG x1.2 (faster on-duty steps, device-bound)
   runtime row   -> async checkpointing (off-duty waste down)
-  scheduler row -> defrag + preemption policy vs naive FIFO-no-preempt
+  scheduler row -> injected policy combinations (fleet.policies) — the
+                   paper's protect_xl/drain_for_xl vs naive spread/none
 """
 from __future__ import annotations
 
 import dataclasses
 
 from benchmarks.common import emit, save_json, timed
-from repro.core.goodput import compute_goodput
 from repro.fleet.sim import FleetSim, SimConfig
 from repro.fleet.workload import generate_jobs
 
 
-def _sim(seed=2, *, pg_mult=1.0, async_ckpt=False, protect_xl=True):
+def _sim(seed=2, *, pg_mult=1.0, async_ckpt=False,
+         placement="best_fit", preemption="protect_xl",
+         defrag="drain_for_xl"):
     cfg = SimConfig(n_pods=8, pod_size=256, horizon=14 * 24 * 3600,
-                    seed=seed, preempt_protect_xl=protect_xl)
+                    seed=seed, retain_intervals=False,
+                    placement=placement, preemption=preemption,
+                    defrag=defrag)
     sim = FleetSim(cfg)
     for j in generate_jobs(300, cfg.horizon, seed=seed,
                            async_checkpoint=async_ckpt,
@@ -25,8 +29,7 @@ def _sim(seed=2, *, pg_mult=1.0, async_ckpt=False, protect_xl=True):
         j = dataclasses.replace(j, pg=min(0.95, j.pg * pg_mult))
         sim.submit(j)
     sim.run()
-    return compute_goodput(sim.intervals, sim.capacity_chip_time,
-                           sim.pg_by_job())
+    return sim.report()
 
 
 def run(seed: int = 2):
@@ -35,8 +38,9 @@ def run(seed: int = 2):
         "baseline": base,
         "compiler_step_time_down": _sim(seed, pg_mult=1.2),
         "runtime_offduty_down": _sim(seed, async_ckpt=True),
-        "scheduler_policy": _sim(seed, protect_xl=True),
-        "scheduler_naive": _sim(seed, protect_xl=False),
+        "scheduler_policy": base,
+        "scheduler_naive": _sim(seed, placement="spread",
+                                preemption="priority_only", defrag="none"),
     }
     table = {k: {m: round(v, 4) for m, v in r.as_dict().items()}
              for k, r in rows.items()}

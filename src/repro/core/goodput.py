@@ -15,8 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from collections import defaultdict
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import Dict, Iterable, Optional
 
 
 class Phase(enum.Enum):
@@ -69,6 +68,21 @@ class GoodputReport:
         return {"SG": self.sg, "RG": self.rg, "PG": self.pg, "MPG": self.mpg}
 
 
+def _ledger_over(intervals: Iterable[Interval],
+                 pg_by_job: Optional[Dict[str, float]] = None):
+    """Feed an interval stream into a throwaway streaming ledger.
+
+    The batch API is kept as a compatibility veneer; the single source of
+    accounting truth is ``repro.core.ledger.GoodputLedger`` (imported
+    lazily — ledger.py imports this module's types at load time).
+    """
+    from repro.core.ledger import GoodputLedger
+
+    led = GoodputLedger(retain_intervals=False, window=0.0)
+    led.extend(intervals, pg_by_job=pg_by_job)
+    return led
+
+
 def compute_goodput(intervals: Iterable[Interval],
                     capacity_chip_time: float,
                     pg_by_job: Optional[Dict[str, float]] = None
@@ -79,23 +93,7 @@ def compute_goodput(intervals: Iterable[Interval],
     the roofline model or measured step times); productive chip-time is
     weighted by it to yield the fleet PG.
     """
-    allocated = 0.0
-    productive = 0.0
-    ideal = 0.0
-    for iv in intervals:
-        if iv.phase in ALLOCATED_PHASES:
-            allocated += iv.chip_time
-        if iv.phase in PRODUCTIVE_PHASES:
-            productive += iv.chip_time
-            ideal += iv.chip_time * (pg_by_job or {}).get(iv.job_id, 1.0)
-    sg = allocated / capacity_chip_time if capacity_chip_time else 0.0
-    rg = productive / allocated if allocated else 0.0
-    pg = ideal / productive if productive else 0.0
-    return GoodputReport(sg=sg, rg=rg, pg=pg,
-                         capacity_chip_time=capacity_chip_time,
-                         allocated_chip_time=allocated,
-                         productive_chip_time=productive,
-                         ideal_chip_time=ideal)
+    return _ledger_over(intervals, pg_by_job).report(capacity_chip_time)
 
 
 # ---------------------------------------------------------------------------
@@ -110,20 +108,13 @@ def segment_goodput(intervals: Iterable[Interval],
                     ) -> Dict[str, GoodputReport]:
     """Per-segment MPG, segmenting on an interval tag (e.g. 'phase_kind',
     'arch', 'size_class', 'framework', 'chip')."""
-    buckets: Dict[str, List[Interval]] = defaultdict(list)
-    for iv in intervals:
-        buckets[iv.segment.get(key, "unknown")].append(iv)
-    return {
-        seg: compute_goodput(ivs, capacity_by_segment.get(seg, 0.0), pg_by_job)
-        for seg, ivs in sorted(buckets.items())
-    }
+    tagged = (iv if key in iv.segment else
+              dataclasses.replace(iv, segment={**iv.segment, key: "unknown"})
+              for iv in intervals)
+    return _ledger_over(tagged, pg_by_job).segment_report(key,
+                                                          capacity_by_segment)
 
 
 def rg_breakdown(intervals: Iterable[Interval]) -> Dict[str, float]:
     """Where allocated-but-unproductive chip-time goes (paper Fig. 10)."""
-    out: Dict[str, float] = defaultdict(float)
-    for iv in intervals:
-        if iv.phase in ALLOCATED_PHASES:
-            out[iv.phase.value] += iv.chip_time
-    total = sum(out.values()) or 1.0
-    return {k: v / total for k, v in sorted(out.items())}
+    return _ledger_over(intervals).rg_breakdown()

@@ -1,0 +1,246 @@
+"""Streaming GoodputLedger: one fleet-wide accounting sink (paper §4-§5).
+
+The paper's central move is a *single* MPG = SG x RG x PG accounting that
+spans the whole stack — scheduler, runtime, and program layers.  Before
+this module each layer kept its own ``List[Interval]`` and every report
+re-walked the full list; a month of fleet time at production job counts
+materializes millions of intervals just to produce four numbers.
+
+``GoodputLedger`` is an append-only event sink with O(1)-per-event
+incremental accumulators:
+
+  * aggregate allocated / productive / ideal chip-time (the MPG inputs);
+  * per-phase chip-time (``rg_breakdown``, paper Fig. 10);
+  * per-(segment key, segment value) sub-ledgers with their own
+    denominators (``segment_report``, paper §5's Simpson's-paradox guard);
+  * a windowed MPG time series (hourly/daily SG/RG/PG, the Fig. 5/11
+    timeline shapes) — intervals crossing a window boundary are split
+    proportionally;
+  * subscriber hooks, so exporters/monitors observe the event stream
+    without a second ledger.
+
+Memory is O(#jobs + #segments + #windows), never O(#events), unless
+``retain_intervals=True`` is requested for debugging/back-compat (the
+legacy ``sim.intervals`` attribute).  ``repro.core.goodput``'s
+``compute_goodput`` / ``segment_goodput`` / ``rg_breakdown`` are thin
+wrappers over a throwaway ledger, so the two paths cannot drift.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import defaultdict
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
+
+from repro.core.goodput import (ALLOCATED_PHASES, PRODUCTIVE_PHASES,
+                                GoodputReport, Interval, Phase)
+
+
+@dataclasses.dataclass
+class _Acc:
+    """Incremental MPG accumulator: the three chip-time sums plus the
+    per-phase split (QUEUED/PARTIAL included — per-segment SG numerators,
+    Fig. 16, need the waiting phases too)."""
+    allocated: float = 0.0
+    productive: float = 0.0
+    ideal: float = 0.0
+    phase: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, phase: Phase, chip_time: float, pg: float):
+        self.phase[phase.value] = self.phase.get(phase.value, 0.0) + chip_time
+        if phase in ALLOCATED_PHASES:
+            self.allocated += chip_time
+        if phase in PRODUCTIVE_PHASES:
+            self.productive += chip_time
+            self.ideal += chip_time * pg
+
+    def report(self, capacity_chip_time: float) -> GoodputReport:
+        sg = self.allocated / capacity_chip_time if capacity_chip_time else 0.0
+        rg = self.productive / self.allocated if self.allocated else 0.0
+        pg = self.ideal / self.productive if self.productive else 0.0
+        return GoodputReport(sg=sg, rg=rg, pg=pg,
+                             capacity_chip_time=capacity_chip_time,
+                             allocated_chip_time=self.allocated,
+                             productive_chip_time=self.productive,
+                             ideal_chip_time=self.ideal)
+
+
+class GoodputLedger:
+    """Append-only goodput event sink with streaming accumulators.
+
+    Parameters
+    ----------
+    capacity_chip_time:
+        Fleet capacity denominator for SG.  Emitting layers call
+        :meth:`add_capacity` instead when several clusters share one
+        ledger; :meth:`report` also accepts an explicit override.
+    window:
+        Width (seconds) of the MPG time-series buckets (default: hourly).
+    retain_intervals:
+        Keep the raw ``Interval`` list (O(#events) memory).  Default on
+        for interactive/simulator use where tests inspect the stream;
+        turn off for fleet-scale runs (see ``benchmarks/ledger_scale.py``).
+    """
+
+    def __init__(self, capacity_chip_time: float = 0.0,
+                 window: float = 3600.0,
+                 retain_intervals: bool = True):
+        self.capacity_chip_time = capacity_chip_time
+        self.window = window
+        self.retain_intervals = retain_intervals
+        self.intervals: Optional[List[Interval]] = \
+            [] if retain_intervals else None
+        self.n_events = 0
+        self._totals = _Acc()
+        # segment key -> segment value -> accumulator
+        self._segments: Dict[str, Dict[str, _Acc]] = \
+            defaultdict(lambda: defaultdict(_Acc))
+        # window index -> accumulator (for the SG/RG/PG time series)
+        self._windows: Dict[int, _Acc] = defaultdict(_Acc)
+        # job -> productive chip-time: lets report() re-weight PG with a
+        # pg_by_job table supplied *after* the stream (legacy API shape)
+        self._job_productive: Dict[str, float] = defaultdict(float)
+        self._subscribers: List[Callable[[Interval], None]] = []
+
+    # ---- event ingestion --------------------------------------------------
+    def subscribe(self, fn: Callable[[Interval], None]) -> None:
+        """Call ``fn(interval)`` on every recorded event."""
+        self._subscribers.append(fn)
+
+    def add_capacity(self, chip_time: float) -> None:
+        """Add an emitter's capacity to the SG denominator (multi-cluster)."""
+        self.capacity_chip_time += chip_time
+
+    def record(self, iv: Interval, pg: float = 1.0) -> None:
+        """Ingest one interval; ``pg`` weights its STEP time into ideal
+        chip-time (the Program Goodput of the job's compiled program)."""
+        ct = iv.chip_time
+        if ct <= 0.0:
+            return
+        self.n_events += 1
+        self._totals.add(iv.phase, ct, pg)
+        if iv.phase in PRODUCTIVE_PHASES:
+            self._job_productive[iv.job_id] += ct
+        for key, val in iv.segment.items():
+            self._segments[key][val].add(iv.phase, ct, pg)
+        self._add_windowed(iv, pg)
+        if self.retain_intervals:
+            self.intervals.append(iv)
+        for fn in self._subscribers:
+            fn(iv)
+
+    def emit(self, job_id: str, phase: Phase, t0: float, t1: float,
+             chips: int, segment: Optional[Dict[str, str]] = None,
+             pg: float = 1.0) -> None:
+        """Convenience constructor-and-record for emitting layers."""
+        if t1 <= t0:
+            return
+        self.record(Interval(job_id=job_id, phase=phase, t0=t0, t1=t1,
+                             chips=chips, segment=segment or {}), pg=pg)
+
+    def extend(self, intervals: Iterable[Interval],
+               pg_by_job: Optional[Dict[str, float]] = None) -> None:
+        """Batch-ingest an interval stream (legacy-list compatibility)."""
+        table = pg_by_job or {}
+        for iv in intervals:
+            self.record(iv, pg=table.get(iv.job_id, 1.0))
+
+    def _add_windowed(self, iv: Interval, pg: float) -> None:
+        w = self.window
+        if w <= 0 or not math.isfinite(iv.t0) or not math.isfinite(iv.t1):
+            return
+        i0 = int(iv.t0 // w)
+        i1 = int(iv.t1 // w) if iv.t1 % w else int(iv.t1 // w) - 1
+        if i1 < i0:
+            i1 = i0
+        for widx in range(i0, i1 + 1):
+            lo = max(iv.t0, widx * w)
+            hi = min(iv.t1, (widx + 1) * w)
+            if hi > lo:
+                self._windows[widx].add(iv.phase, (hi - lo) * iv.chips, pg)
+
+    # ---- reporting --------------------------------------------------------
+    def report(self, capacity_chip_time: Optional[float] = None,
+               pg_by_job: Optional[Dict[str, float]] = None) -> GoodputReport:
+        """Aggregate MPG report.  With ``pg_by_job``, PG is recomputed from
+        the per-job productive sums (exactly the legacy ``compute_goodput``
+        semantics); otherwise the streamed per-event ``pg`` weights apply."""
+        cap = (self.capacity_chip_time if capacity_chip_time is None
+               else capacity_chip_time)
+        acc = self._totals
+        if pg_by_job is not None:
+            acc = _Acc(allocated=self._totals.allocated,
+                       productive=self._totals.productive,
+                       ideal=sum(ct * pg_by_job.get(j, 1.0)
+                                 for j, ct in
+                                 sorted(self._job_productive.items())))
+        return acc.report(cap)
+
+    def segment_report(self, key: str,
+                       capacity_by_segment: Optional[Dict[str, float]] = None
+                       ) -> Dict[str, GoodputReport]:
+        """Per-segment MPG with per-segment denominators (paper §5)."""
+        caps = capacity_by_segment or {}
+        return {seg: acc.report(caps.get(seg, 0.0))
+                for seg, acc in sorted(self._segments.get(key, {}).items())}
+
+    def rg_breakdown(self) -> Dict[str, float]:
+        """Allocated chip-time shares by phase (paper Fig. 10)."""
+        out = {p.value: self._totals.phase[p.value]
+               for p in Phase
+               if p in ALLOCATED_PHASES and
+               self._totals.phase.get(p.value, 0.0) > 0}
+        total = sum(out.values()) or 1.0
+        return {k: v / total for k, v in sorted(out.items())}
+
+    def phase_chip_time(self, phase: Phase) -> float:
+        """Raw chip-time sum for one phase (incl. QUEUED/PARTIAL)."""
+        return self._totals.phase.get(phase.value, 0.0)
+
+    def segment_phase_chip_time(self, key: str) -> Dict[str, Dict[str, float]]:
+        """Per-segment per-phase chip-time sums — the building blocks for
+        per-class SG numerators (Fig. 16: PARTIAL vs allocated by class)."""
+        return {seg: dict(acc.phase)
+                for seg, acc in sorted(self._segments.get(key, {}).items())}
+
+    def series(self, capacity_chips: Optional[float] = None
+               ) -> List[Dict[str, float]]:
+        """Windowed SG/RG/PG/MPG time series (Fig. 5/11 timelines).
+
+        ``capacity_chips`` sets each window's SG denominator to
+        ``capacity_chips * window``; defaults to spreading the ledger's
+        total capacity uniformly over the observed window span.
+        """
+        if not self._windows:
+            return []
+        idxs = sorted(self._windows)
+        if capacity_chips is not None:
+            win_cap = capacity_chips * self.window
+        else:
+            span = (idxs[-1] - idxs[0] + 1) * self.window
+            win_cap = (self.capacity_chip_time * self.window / span
+                       if span else 0.0)
+        out = []
+        for widx in idxs:
+            rep = self._windows[widx].report(win_cap)
+            out.append({"t0": widx * self.window,
+                        "t1": (widx + 1) * self.window,
+                        "sg": rep.sg, "rg": rep.rg, "pg": rep.pg,
+                        "mpg": rep.mpg,
+                        "allocated_chip_time": rep.allocated_chip_time,
+                        "productive_chip_time": rep.productive_chip_time,
+                        "ideal_chip_time": rep.ideal_chip_time})
+        return out
+
+    # ---- introspection ----------------------------------------------------
+    def state_size(self) -> Dict[str, int]:
+        """Number of tracked accumulator entries — the memory story told by
+        ``benchmarks/ledger_scale.py`` (O(state) vs O(events))."""
+        return {
+            "phases": len(self._totals.phase),
+            "segment_keys": len(self._segments),
+            "segment_cells": sum(len(v) for v in self._segments.values()),
+            "windows": len(self._windows),
+            "jobs": len(self._job_productive),
+            "retained_intervals": len(self.intervals or ()),
+        }

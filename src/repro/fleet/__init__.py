@@ -1,3 +1,7 @@
 from repro.fleet.cluster import Cluster  # noqa: F401
 from repro.fleet.job import JobSpec, SIZE_CLASSES  # noqa: F401
+from repro.fleet.policies import (DEFRAG_POLICIES,  # noqa: F401
+                                  PLACEMENT_POLICIES, PREEMPTION_POLICIES,
+                                  DefragPolicy, PlacementPolicy,
+                                  PreemptionPolicy)
 from repro.fleet.sim import FleetSim, SimConfig  # noqa: F401

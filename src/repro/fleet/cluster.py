@@ -112,10 +112,13 @@ class Cluster:
                    if p.largest_slice() == self.pod_size) >= need
 
     def alloc(self, job_id: str, chips: int, prefer_tight: bool = True,
-              exclude: Tuple[int, ...] = ()) -> Optional[Allocation]:
-        """Topology-aware placement: tightest pod first (defragmentation-
-        friendly best-fit, paper §5.3).  ``exclude`` pods are draining for
-        a queued multi-pod job and take no new sub-pod work."""
+              exclude: Tuple[int, ...] = (),
+              pod_key=None) -> Optional[Allocation]:
+        """Topology-aware placement.  ``pod_key`` (a sort key over pods,
+        normally supplied by a ``fleet.policies.PlacementPolicy``) orders
+        the candidate pods; the default reproduces best-fit — tightest pod
+        first (defragmentation-friendly, paper §5.3).  ``exclude`` pods are
+        draining for a queued multi-pod job and take no new sub-pod work."""
         if chips <= self.pod_size:
             want = _round_pow2(chips)
             candidates = [p for p in self.pods
@@ -123,7 +126,9 @@ class Cluster:
                           and p.pod_id not in exclude]
             if not candidates:
                 return None
-            if prefer_tight:
+            if pod_key is not None:
+                candidates.sort(key=pod_key)
+            elif prefer_tight:
                 candidates.sort(key=lambda p: (p.largest_slice(),
                                                -len(self.pod_jobs(p.pod_id))))
             pod = candidates[0]

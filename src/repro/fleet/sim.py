@@ -6,12 +6,18 @@ productive-rate factor) so a month of fleet time with thousands of jobs
 simulates in milliseconds while emitting the exact same Interval ledger the
 MPG metric consumes.
 
-Scheduler policy (paper §5.3, Fig. 16):
+Scheduler policy (paper §5.3, Fig. 16) is *pluggable* — strategy objects
+from ``repro.fleet.policies`` injected via ``SimConfig``; the defaults
+reproduce the paper's policy:
   * topology-aware best-fit placement into buddy-allocated pod slices;
   * preemption prefers MEDIUM victims — evicting XL jobs cascades (huge
     restart cost), and SMALL jobs finish soon anyway;
   * defragmentation: when the queue head cannot fit due to fragmentation,
     small movable jobs are migrated (checkpoint-resume) to coalesce slices.
+
+Accounting streams into a ``repro.core.ledger.GoodputLedger`` (shared
+across layers/clusters when one is injected); ``sim.intervals`` remains
+available when ``SimConfig.retain_intervals`` is on (the default).
 """
 from __future__ import annotations
 
@@ -20,11 +26,15 @@ import heapq
 import math
 import random
 from collections import defaultdict
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple, Union
 
 from repro.core.goodput import Interval, Phase
+from repro.core.ledger import GoodputLedger
 from repro.fleet.cluster import Cluster
 from repro.fleet.job import JobRuntime, JobSpec
+from repro.fleet.policies import (DefragPolicy, PlacementPolicy,
+                                  PreemptionPolicy, resolve_defrag,
+                                  resolve_placement, resolve_preemption)
 
 
 @dataclasses.dataclass
@@ -36,15 +46,24 @@ class SimConfig:
     seed: int = 0
     xl_assembly_per_pod: float = 60.0        # PARTIAL time per extra pod
     defrag_migration_cost: float = 45.0      # seconds to move a small job
-    preempt_protect_xl: bool = True          # paper's policy; ablatable
+    preempt_protect_xl: bool = True          # legacy alias: False selects
+                                             # the "priority_only" policy
     async_snapshot_pause: float = 1.5        # device pause per async ckpt
     aging_hours: float = 6.0                 # queue aging: +1 priority / N h
     preempt_gap: float = 1.0                 # min priority advantage to evict
     drain_cap: int = 4                       # max migrations per event
+    # pluggable scheduler policies (name or strategy object; see
+    # repro.fleet.policies for the registries)
+    placement: Union[str, PlacementPolicy] = "best_fit"
+    preemption: Union[str, PreemptionPolicy] = "protect_xl"
+    defrag: Union[str, DefragPolicy] = "drain_for_xl"
+    # accounting
+    retain_intervals: bool = True            # keep raw Interval list
+    ledger_window: float = 3600.0            # MPG time-series bucket (s)
 
 
 class FleetSim:
-    def __init__(self, cfg: SimConfig):
+    def __init__(self, cfg: SimConfig, ledger: Optional[GoodputLedger] = None):
         self.cfg = cfg
         self.cluster = Cluster(cfg.n_pods, cfg.pod_size)
         self.rng = random.Random(cfg.seed)
@@ -54,7 +73,6 @@ class FleetSim:
         self.jobs: Dict[str, JobRuntime] = {}
         self.queue: List[str] = []
         self.running: Dict[str, dict] = {}     # job_id -> segment info
-        self.intervals: List[Interval] = []
         self.telemetry: List[dict] = []
         self._epoch: Dict[str, int] = defaultdict(int)
         self._queued_since: Dict[str, float] = {}
@@ -62,6 +80,28 @@ class FleetSim:
         # PARTIAL (counts against per-class SG, paper Fig. 16) rather than
         # initial QUEUED (a fleet-capacity matter, not a per-job one).
         self._requeued: set = set()
+        # scheduler policies (cfg.preempt_protect_xl=False is the legacy
+        # spelling of the priority_only ablation)
+        preemption = cfg.preemption
+        if preemption == "protect_xl" and not cfg.preempt_protect_xl:
+            preemption = "priority_only"
+        self.placement = resolve_placement(cfg.placement)
+        self.preemption = resolve_preemption(preemption)
+        self.defrag = resolve_defrag(cfg.defrag)
+        # accounting: one streaming ledger, optionally shared fleet-wide
+        self.ledger = ledger if ledger is not None else GoodputLedger(
+            window=cfg.ledger_window,
+            retain_intervals=cfg.retain_intervals)
+        self.ledger.add_capacity(self.capacity_chip_time)
+
+    @property
+    def intervals(self) -> List[Interval]:
+        """The raw event stream (requires ``retain_intervals``)."""
+        if self.ledger.intervals is None:
+            raise AttributeError(
+                "interval retention is off (SimConfig.retain_intervals="
+                "False); use the streaming ledger reports instead")
+        return self.ledger.intervals
 
     # ---- event plumbing -------------------------------------------------
     def _push(self, t: float, kind: str, payload: str):
@@ -77,13 +117,13 @@ class FleetSim:
         if t1 <= t0:
             return
         s = job.spec
-        self.intervals.append(Interval(
+        self.ledger.emit(
             job_id=s.job_id, phase=phase, t0=t0, t1=t1, chips=s.chips,
             segment={
                 "size_class": s.size_class, "phase_kind": s.phase_kind,
                 "arch": s.arch, "framework": s.framework,
                 "ckpt": "async" if s.async_checkpoint else "sync",
-            }))
+            }, pg=s.pg)
 
     # ---- productive-rate model -------------------------------------------
     def _rates(self, s: JobSpec) -> Tuple[float, float, float]:
@@ -108,18 +148,9 @@ class FleetSim:
         return base + waited / (self.cfg.aging_hours * 3600.0)
 
     def _drain_for_xl(self) -> tuple:
-        """When a multi-pod job queues, reserve + drain the emptiest pods
-        (the paper's defragmentation at pod granularity)."""
-        pod_size = self.cfg.pod_size
-        xl_need = max((self.jobs[j].spec.chips // pod_size
-                       for j in self.queue
-                       if self.jobs[j].spec.chips > pod_size), default=0)
-        if xl_need == 0:
-            return ()
-        # emptiest pods first (prefer already-empty: no migration needed)
-        by_emptiness = sorted(self.cluster.pods,
-                              key=lambda p: -p.free_chips())
-        drain = tuple(p.pod_id for p in by_emptiness[:xl_need])
+        """When a multi-pod job queues, reserve + drain pods chosen by the
+        defrag policy (the paper's defragmentation at pod granularity)."""
+        drain = tuple(self.defrag.drain_pods(self))
         migrated = 0
         for pid in drain:
             for job_id in list(self.cluster.pod_jobs(pid)):
@@ -130,8 +161,8 @@ class FleetSim:
                     continue
                 self._stop_segment(v, lost=False)   # checkpoint-resume
                 self.cluster.release(job_id)
-                if self.cluster.alloc(job_id, v.spec.chips,
-                                      exclude=drain) is not None:
+                if self.placement.alloc(self.cluster, job_id, v.spec.chips,
+                                        exclude=drain) is not None:
                     v.spec = dataclasses.replace(
                         v.spec, init_time=self.cfg.defrag_migration_cost)
                     self._start_segment(v)
@@ -150,8 +181,8 @@ class FleetSim:
         for job_id in list(self.queue):
             job = self.jobs[job_id]
             exclude = drain if job.spec.chips <= self.cfg.pod_size else ()
-            if self.cluster.alloc(job_id, job.spec.chips,
-                                  exclude=exclude) is not None:
+            if self.placement.alloc(self.cluster, job_id, job.spec.chips,
+                                    exclude=exclude) is not None:
                 scheduled.append(job_id)
                 self._start_segment(job)
                 continue
@@ -161,40 +192,40 @@ class FleetSim:
             if job_id in self._requeued and job.spec.elastic \
                     and 2 <= job.spec.chips <= self.cfg.pod_size:
                 half = job.spec.chips // 2
-                if self.cluster.alloc(job_id, half,
-                                      exclude=exclude) is not None:
+                if self.placement.alloc(self.cluster, job_id, half,
+                                        exclude=exclude) is not None:
                     job.spec = dataclasses.replace(job.spec, chips=half)
                     scheduled.append(job_id)
                     self._start_segment(job)
                     continue
             # defragmentation: migrate small jobs if that frees a slice
             if self._defrag_for(job):
-                if self.cluster.alloc(job_id, job.spec.chips) is not None:
+                if self.placement.alloc(self.cluster, job_id,
+                                        job.spec.chips) is not None:
                     scheduled.append(job_id)
                     self._start_segment(job)
                     continue
             # preemption for high-priority arrivals
             if self._preempt_for(job):
-                if self.cluster.alloc(job_id, job.spec.chips) is not None:
+                if self.placement.alloc(self.cluster, job_id,
+                                        job.spec.chips) is not None:
                     scheduled.append(job_id)
                     self._start_segment(job)
         for j in scheduled:
             self.queue.remove(j)
 
     def _defrag_for(self, job: JobRuntime) -> bool:
-        """Migrate one small running job out of the most-fragmented pod."""
-        if job.spec.chips > self.cfg.pod_size:
+        """Checkpoint-migrate the defrag policy's chosen victim so a slice
+        can coalesce for ``job``."""
+        victim = self.defrag.migration_victim(self, job)
+        if victim is None:
             return False
-        victims = [j for j, seg in self.running.items()
-                   if self.jobs[j].spec.size_class == "small"]
-        if not victims:
-            return False
-        victim = min(victims, key=lambda j: self.jobs[j].spec.chips)
         v = self.jobs[victim]
         self._stop_segment(v, lost=False)     # checkpoint-resume migration
         self.cluster.release(victim)
         # instant re-placement elsewhere (cost charged as INIT on restart)
-        if self.cluster.alloc(victim, v.spec.chips) is not None:
+        if self.placement.alloc(self.cluster, victim,
+                                v.spec.chips) is not None:
             v.spec = dataclasses.replace(
                 v.spec, init_time=self.cfg.defrag_migration_cost)
             self._start_segment(v)
@@ -205,65 +236,13 @@ class FleetSim:
         return True
 
     def _preempt_for(self, job: JobRuntime) -> bool:
-        if job.spec.chips > self.cfg.pod_size:
-            return self._preempt_pods_for_xl(job)
-        return self._preempt_chips(job)
-
-    def _preempt_pods_for_xl(self, job: JobRuntime) -> bool:
-        """Whole-pod eviction for multi-pod jobs: pick the pods whose
-        occupants are all evictable and cheapest to displace."""
-        need = -(-job.spec.chips // self.cfg.pod_size)
-        eff = self._eff_priority(job.spec.job_id)
-        usable = []
-        for pod in self.cluster.pods:
-            occupants = self.cluster.pod_jobs(pod.pod_id)
-            cost = 0.0
-            ok = True
-            for j in occupants:
-                v = self.jobs[j]
-                if v.spec.chips > self.cfg.pod_size:   # another XL: protected
-                    ok = False
-                    break
-                if self.cfg.preempt_protect_xl and v.spec.priority >= eff:
-                    ok = False
-                    break
-                cost += v.spec.chips
-            if ok:
-                usable.append((cost, pod.pod_id, occupants))
-        if len(usable) < need:
+        """Evict the preemption policy's victims (it guarantees they free
+        enough capacity or returns None); the sim books LOST work, requeues
+        them, and the caller retries placement."""
+        victims = self.preemption.victims_for(self, job)
+        if not victims:
             return False
-        usable.sort()
-        for _, pid, occupants in usable[:need]:
-            for j in occupants:
-                v = self.jobs[j]
-                self._stop_segment(v, lost=True)
-                self.cluster.release(j)
-                v.preemptions += 1
-                self._queued_since[j] = self.now
-                self._requeued.add(j)
-                self.queue.append(j)
-        return True
-
-    def _preempt_chips(self, job: JobRuntime) -> bool:
-        """Evict lower-priority victims; paper policy protects XL + small."""
-        candidates = []
-        for j in self.running:
-            v = self.jobs[j]
-            if v.spec.priority > self._eff_priority(job.spec.job_id) - self.cfg.preempt_gap:
-                continue
-            # eviction churn guard: a job already evicted twice is immune
-            if v.preemptions >= 2:
-                continue
-            sc = v.spec.size_class
-            if self.cfg.preempt_protect_xl and sc == "xl":
-                continue
-            rank = {"medium": 0, "large": 1, "small": 2, "xl": 3}[sc]
-            candidates.append((rank, v.spec.chips, j))
-        if not candidates:
-            return False
-        candidates.sort()
-        freed = 0
-        for _, chips, j in candidates:
+        for j in victims:
             v = self.jobs[j]
             self._stop_segment(v, lost=True)
             self.cluster.release(j)
@@ -271,10 +250,7 @@ class FleetSim:
             self._queued_since[j] = self.now
             self._requeued.add(j)
             self.queue.append(j)
-            freed += chips
-            if freed >= job.spec.chips:
-                return True
-        return freed >= job.spec.chips
+        return True
 
     # ---- run segments ----------------------------------------------------
     def _start_segment(self, job: JobRuntime):
@@ -413,3 +389,9 @@ class FleetSim:
 
     def pg_by_job(self) -> Dict[str, float]:
         return {j: r.spec.pg for j, r in self.jobs.items()}
+
+    def report(self):
+        """Streaming MPG report — no interval list required.  When the
+        ledger is shared across clusters the denominator is fleet-wide;
+        pass an explicit capacity to ``ledger.report`` for a local view."""
+        return self.ledger.report()

@@ -5,9 +5,14 @@
 
 Implements the serve path end-to-end: request queue -> batched prefill ->
 batched decode with a shared ring-buffer KV cache -> per-request detach.
-Runtime Goodput here counts decode steps as productive and queue/prefill
-bubbles against RG — serving's fluctuating demand is why the paper's
-Fig. 15 shows lower serve RG than training.
+
+Accounting streams into the same ``GoodputLedger`` the fleet simulator and
+training orchestrator use — one fleet-wide MPG sink across all three stack
+layers (paper §4).  Each batch slot is accounted like a chip: queue wait is
+QUEUED, prefill is INIT, decode iterations a request actually uses are
+STEP, and batch bubbles — padded tail slots and early-finished requests
+riding out the longest request's decode — are IDLE.  Serving's fluctuating
+demand is why the paper's Fig. 15 shows lower serve RG than training.
 """
 from __future__ import annotations
 
@@ -15,13 +20,15 @@ import argparse
 import dataclasses
 import json
 import time
-from typing import List
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, get_smoke
+from repro.core.goodput import Phase
+from repro.core.ledger import GoodputLedger
 from repro.models import model, transformer
 
 
@@ -35,20 +42,53 @@ class Request:
     t_first: float = 0.0
     t_done: float = 0.0
 
+    @property
+    def is_pad(self) -> bool:
+        """Sentinel clones that fill a tail batch; excluded from metrics."""
+        return self.rid < 0
+
+
+def pad_group(group: List[Request], batch: int) -> List[Request]:
+    """Pad a tail batch to full width with sentinel clones.
+
+    The clones share prompts (the compiled program needs a full batch of
+    real token ids) but carry ``rid=-1`` and their *own* ``out_tokens``
+    lists, so ``run_batch`` neither appends generated tokens to a real
+    request twice nor overwrites its ``t_first``/``t_done`` — the
+    double-counted ``tokens_generated``/``throughput_tok_s`` bug.
+    """
+    pads = [Request(rid=-1, prompt=group[i % len(group)].prompt,
+                    max_new=group[i % len(group)].max_new)
+            for i in range(batch - len(group))]
+    return group + pads
+
 
 class Server:
-    def __init__(self, cfg, batch: int, prompt_len: int, max_len: int):
+    def __init__(self, cfg, batch: int, prompt_len: int, max_len: int,
+                 ledger: Optional[GoodputLedger] = None):
         self.cfg = cfg
         self.batch = batch
+        self.ledger = ledger if ledger is not None else GoodputLedger()
         self.params = model.init_params(cfg, jax.random.key(0))
         self.prefill = jax.jit(
             lambda p, b: transformer.prefill(p, b, cfg, max_len=max_len)
             if cfg.family != "encdec" else model.prefill_fn(cfg)(p, b))
         self.decode = jax.jit(model.decode_fn(cfg))
 
-    def run_batch(self, reqs: List[Request]):
+    def _emit(self, rid: int, phase: Phase, t0: float, t1: float,
+              chips: int = 1):
+        self.ledger.emit(job_id=f"req{rid}" if rid >= 0 else "pad",
+                         phase=phase, t0=t0, t1=t1, chips=chips,
+                         segment={"phase_kind": "serve",
+                                  "arch": self.cfg.name})
+
+    def run_batch(self, reqs: List[Request]) -> Tuple[float, float]:
+        real = [r for r in reqs if not r.is_pad]
+        n_pad = len(reqs) - len(real)
         toks = np.stack([r.prompt for r in reqs])
         t0 = time.monotonic()
+        for r in real:                       # queue wait: submit -> batch
+            self._emit(r.rid, Phase.QUEUED, r.t_submit, t0)
         batch = {"tokens": jnp.asarray(toks)}
         if self.cfg.family == "vlm":
             batch["patches"] = jnp.zeros(
@@ -63,7 +103,14 @@ class Server:
         t_prefill = time.monotonic() - t0
         for r, t in zip(reqs, np.asarray(tok)):
             r.out_tokens.append(int(t))
-            r.t_first = time.monotonic()
+            if not r.is_pad:
+                r.t_first = time.monotonic()
+        # prefill is program setup for the batch: INIT for live slots,
+        # IDLE for the padded ones (a batch-shape bubble)
+        self._emit(real[0].rid if real else -1, Phase.INIT,
+                   t0, t0 + t_prefill, chips=len(real))
+        if n_pad:
+            self._emit(-1, Phase.IDLE, t0, t0 + t_prefill, chips=n_pad)
         max_new = max(r.max_new for r in reqs)
         t1 = time.monotonic()
         for _ in range(max_new - 1):
@@ -74,8 +121,18 @@ class Server:
                     r.out_tokens.append(int(t))
         jax.block_until_ready(tok)
         t_decode = time.monotonic() - t1
-        for r in reqs:
+        t2 = t1 + t_decode
+        iters = max(max_new - 1, 1)
+        for r in real:
             r.t_done = time.monotonic()
+            # STEP for the decode iterations this request consumed, IDLE
+            # for the bubble riding out the batch's longest request
+            frac = (len(r.out_tokens) - 1) / iters
+            split = t1 + frac * t_decode
+            self._emit(r.rid, Phase.STEP, t1, split)
+            self._emit(r.rid, Phase.IDLE, split, t2)
+        if n_pad:
+            self._emit(-1, Phase.IDLE, t1, t2, chips=n_pad)
         return t_prefill, t_decode
 
 
@@ -95,15 +152,14 @@ def main(argv=None):
                                     args.prompt_len).astype(np.int32),
                     args.max_new, t_submit=time.monotonic())
             for i in range(args.requests)]
+    ledger = GoodputLedger(window=60.0)
     server = Server(cfg, args.batch, args.prompt_len,
-                    max_len=args.prompt_len + args.max_new)
+                    max_len=args.prompt_len + args.max_new, ledger=ledger)
 
     t_pre = t_dec = 0.0
     for i in range(0, len(reqs), args.batch):
-        group = reqs[i:i + args.batch]
-        if len(group) < args.batch:   # pad the tail batch
-            group = group + group[: args.batch - len(group)]
-        p, d = server.run_batch(group[: args.batch])
+        group = pad_group(reqs[i:i + args.batch], args.batch)
+        p, d = server.run_batch(group)
         t_pre += p
         t_dec += d
 
@@ -111,6 +167,7 @@ def main(argv=None):
     toks = sum(len(r.out_tokens) for r in done)
     wall = max(r.t_done for r in done) - min(r.t_submit for r in done)
     ttft = float(np.mean([r.t_first - r.t_submit for r in done]))
+    rep = ledger.report(capacity_chip_time=args.batch * wall)
     print(json.dumps({
         "arch": cfg.name,
         "requests": len(done),
@@ -119,6 +176,9 @@ def main(argv=None):
         "mean_ttft_s": round(ttft, 4),
         "prefill_s": round(t_pre, 3),
         "decode_s": round(t_dec, 3),
+        "serve_rg": round(rep.rg, 4),
+        "rg_breakdown": {k: round(v, 4)
+                         for k, v in ledger.rg_breakdown().items()},
     }, indent=1))
 
 

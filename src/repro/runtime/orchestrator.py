@@ -16,6 +16,7 @@ import jax
 import numpy as np
 
 from repro.core.goodput import Interval, Phase
+from repro.core.ledger import GoodputLedger
 from repro.data.pipeline import DataPipeline
 from repro.models import model
 from repro.models.config import ModelConfig
@@ -40,23 +41,34 @@ class RunConfig:
 
 class Orchestrator:
     def __init__(self, cfg: ModelConfig, run: RunConfig,
-                 aot: Optional[AotCache] = None):
+                 aot: Optional[AotCache] = None,
+                 ledger: Optional[GoodputLedger] = None):
         self.cfg = cfg
         self.run_cfg = run
         self.aot = aot or AotCache()
-        self.intervals: List[Interval] = []
+        # accounting streams into a GoodputLedger — pass a shared one to
+        # fold this run into fleet-wide MPG alongside sim/serve emitters
+        self.ledger = ledger if ledger is not None else GoodputLedger()
         self.ckpt = CheckpointManager(run.ckpt_dir, keep=run.keep,
                                       async_mode=run.async_checkpoint)
         self.state = None
         self.step_times: List[float] = []
 
+    @property
+    def intervals(self) -> List[Interval]:
+        """The raw event stream (requires a retaining ledger)."""
+        if self.ledger.intervals is None:
+            raise AttributeError("interval retention is off on this ledger; "
+                                 "use the streaming ledger reports instead")
+        return self.ledger.intervals
+
     # ------------------------------------------------------------------
     def _emit(self, phase: Phase, t0: float, t1: float):
         r = self.run_cfg
-        self.intervals.append(Interval(
+        self.ledger.emit(
             job_id=r.job_id, phase=phase, t0=t0, t1=t1, chips=r.chips,
-            segment={"arch": self.cfg.name,
-                     "ckpt": "async" if r.async_checkpoint else "sync"}))
+            segment={"arch": self.cfg.name, "phase_kind": "train",
+                     "ckpt": "async" if r.async_checkpoint else "sync"})
 
     # ------------------------------------------------------------------
     def _build(self):

@@ -1,0 +1,51 @@
+"""Graceful degradation when ``hypothesis`` is not installed.
+
+Property-based tests decorate with ``@settings(...)`` / ``@given(...)``
+and build strategies from ``st`` at *module import* time, so a plain
+``pytest.importorskip`` would skip whole modules (and their many
+non-property tests) or die at collection.  These stand-ins let the
+module import cleanly: strategy expressions evaluate to inert
+placeholders and ``@given`` replaces the test with a zero-argument
+skip, leaving every example-based test in the module runnable.
+
+Install the real thing with the ``test`` extra: ``pip install -e .[test]``.
+"""
+from __future__ import annotations
+
+import pytest
+
+
+def settings(*_args, **_kwargs):
+    """No-op replacement for ``hypothesis.settings`` as a decorator."""
+    def deco(fn):
+        return fn
+    return deco
+
+
+def given(*_args, **_kwargs):
+    """Replace the property test with a zero-arg skip (keeping its name,
+    so -k selections and reports stay stable)."""
+    def deco(fn):
+        @pytest.mark.skip(reason="hypothesis not installed "
+                                 "(pip install -e .[test])")
+        def _skipped():
+            pass          # pragma: no cover
+        _skipped.__name__ = fn.__name__
+        _skipped.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+        _skipped.__doc__ = fn.__doc__
+        return _skipped
+    return deco
+
+
+class _Strategy:
+    """Inert placeholder: any strategy-combinator expression evaluates to
+    another placeholder instead of raising at module import."""
+
+    def __call__(self, *args, **kwargs):
+        return _Strategy()
+
+    def __getattr__(self, name):
+        return _Strategy()
+
+
+st = _Strategy()

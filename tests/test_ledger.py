@@ -1,0 +1,187 @@
+"""Streaming GoodputLedger tests: golden equivalence against the legacy
+list-based computation, windowed-series conservation, segment reports,
+subscriber hooks, and O(state) memory behaviour."""
+import random
+
+import pytest
+
+from repro.core.goodput import (ALLOCATED_PHASES, PRODUCTIVE_PHASES,
+                                Interval, Phase, compute_goodput,
+                                rg_breakdown, segment_goodput)
+from repro.core.ledger import GoodputLedger
+
+ARCHES = ("smollm-135m", "mixtral-8x7b", "whisper-medium")
+SIZES = ("small", "medium", "large", "xl")
+
+
+def _random_stream(n=400, seed=0, horizon=50_000.0):
+    """A messy but valid interval stream: every phase, several jobs,
+    several segment tags, intervals crossing window boundaries."""
+    rng = random.Random(seed)
+    phases = list(Phase)
+    ivs = []
+    for i in range(n):
+        t0 = rng.uniform(0, horizon)
+        t1 = t0 + rng.uniform(0.0, horizon / 10)
+        job = f"job{rng.randrange(12)}"
+        ivs.append(Interval(
+            job_id=job, phase=rng.choice(phases), t0=t0, t1=t1,
+            chips=rng.choice([1, 4, 16, 256]),
+            segment={"arch": rng.choice(ARCHES),
+                     "size_class": rng.choice(SIZES)}))
+    pg = {f"job{j}": rng.uniform(0.2, 0.9) for j in range(12)}
+    return ivs, pg
+
+
+def _legacy_goodput(intervals, capacity, pg_by_job=None):
+    """The original whole-list computation, kept verbatim as the golden
+    reference so the streaming path is checked against independent code."""
+    allocated = productive = ideal = 0.0
+    for iv in intervals:
+        if iv.phase in ALLOCATED_PHASES:
+            allocated += iv.chip_time
+        if iv.phase in PRODUCTIVE_PHASES:
+            productive += iv.chip_time
+            ideal += iv.chip_time * (pg_by_job or {}).get(iv.job_id, 1.0)
+    sg = allocated / capacity if capacity else 0.0
+    rg = productive / allocated if allocated else 0.0
+    pg = ideal / productive if productive else 0.0
+    return sg, rg, pg
+
+
+# ---------------------------------------------------------------------------
+# golden equivalence: streaming == batch == legacy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 7])
+def test_ledger_matches_legacy_batch(seed):
+    ivs, pg = _random_stream(seed=seed)
+    cap = 5e9
+    led = GoodputLedger(capacity_chip_time=cap, retain_intervals=False)
+    led.extend(ivs, pg_by_job=pg)
+    rep = led.report()
+    sg, rg, pgv = _legacy_goodput(ivs, cap, pg)
+    assert rep.sg == pytest.approx(sg)
+    assert rep.rg == pytest.approx(rg)
+    assert rep.pg == pytest.approx(pgv)
+    # and the wrapper API agrees with itself
+    wrapped = compute_goodput(ivs, cap, pg)
+    assert wrapped.mpg == pytest.approx(rep.mpg)
+
+
+def test_report_time_pg_table_equals_streamed_pg():
+    """pg supplied per-event at record() == pg supplied as a table at
+    report() — the two API shapes must not drift."""
+    ivs, pg = _random_stream(seed=3)
+    streamed = GoodputLedger(retain_intervals=False)
+    for iv in ivs:
+        streamed.record(iv, pg=pg.get(iv.job_id, 1.0))
+    tabled = GoodputLedger(retain_intervals=False)
+    tabled.extend(ivs)     # default pg=1.0 at record time
+    cap = 1e9
+    assert streamed.report(cap).pg == pytest.approx(
+        tabled.report(cap, pg_by_job=pg).pg)
+
+
+def test_segment_report_matches_legacy():
+    ivs, pg = _random_stream(seed=5)
+    caps = {a: 1e9 for a in ARCHES}
+    led = GoodputLedger(retain_intervals=False)
+    led.extend(ivs, pg_by_job=pg)
+    by_stream = led.segment_report("arch", caps)
+    by_legacy = segment_goodput(ivs, "arch", caps, pg)
+    assert set(by_stream) == set(by_legacy)
+    for arch in by_stream:
+        assert by_stream[arch].sg == pytest.approx(by_legacy[arch].sg)
+        assert by_stream[arch].rg == pytest.approx(by_legacy[arch].rg)
+        assert by_stream[arch].pg == pytest.approx(by_legacy[arch].pg)
+
+
+def test_rg_breakdown_matches_legacy():
+    ivs, _ = _random_stream(seed=6)
+    led = GoodputLedger(retain_intervals=False)
+    led.extend(ivs)
+    bd = led.rg_breakdown()
+    legacy = rg_breakdown(ivs)
+    assert bd == pytest.approx(legacy)
+    assert sum(bd.values()) == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# windowed time series
+# ---------------------------------------------------------------------------
+
+def test_windowed_series_sums_to_aggregate():
+    """Splitting intervals across windows must conserve chip-time: the
+    per-window allocated/productive/ideal sums add up to the aggregate."""
+    ivs, pg = _random_stream(seed=9)
+    led = GoodputLedger(window=3600.0, retain_intervals=False)
+    led.extend(ivs, pg_by_job=pg)
+    series = led.series(capacity_chips=2048)
+    rep = led.report(1.0)
+    assert sum(w["allocated_chip_time"] for w in series) == pytest.approx(
+        rep.allocated_chip_time)
+    assert sum(w["productive_chip_time"] for w in series) == pytest.approx(
+        rep.productive_chip_time)
+    assert sum(w["ideal_chip_time"] for w in series) == pytest.approx(
+        rep.ideal_chip_time)
+
+
+def test_window_boundary_split():
+    """One interval straddling 3 hourly windows lands proportionally."""
+    led = GoodputLedger(window=3600.0)
+    led.emit("a", Phase.STEP, t0=1800.0, t1=9000.0, chips=2)
+    series = led.series(capacity_chips=2)
+    assert len(series) == 3
+    assert series[0]["productive_chip_time"] == pytest.approx(1800 * 2)
+    assert series[1]["productive_chip_time"] == pytest.approx(3600 * 2)
+    assert series[2]["productive_chip_time"] == pytest.approx(1800 * 2)
+    # middle window is fully productive at capacity
+    assert series[1]["sg"] == pytest.approx(1.0)
+    assert series[1]["rg"] == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# sink mechanics
+# ---------------------------------------------------------------------------
+
+def test_subscriber_hook_sees_every_event():
+    ivs, _ = _random_stream(seed=11, n=50)
+    seen = []
+    led = GoodputLedger(retain_intervals=False)
+    led.subscribe(seen.append)
+    led.extend(ivs)
+    kept = [iv for iv in ivs if iv.chip_time > 0]
+    assert len(seen) == len(kept) == led.n_events
+
+
+def test_no_interval_materialization():
+    ivs, _ = _random_stream(seed=13, n=1000)
+    led = GoodputLedger(retain_intervals=False)
+    led.extend(ivs)
+    assert led.intervals is None
+    state = led.state_size()
+    assert state["retained_intervals"] == 0
+    # accumulator state is bounded by jobs/segments/windows, not events
+    assert sum(state.values()) < led.n_events / 2
+
+
+def test_zero_and_negative_length_intervals_ignored():
+    led = GoodputLedger()
+    led.emit("a", Phase.STEP, t0=10.0, t1=10.0, chips=4)
+    led.emit("a", Phase.STEP, t0=10.0, t1=5.0, chips=4)
+    assert led.n_events == 0
+    assert led.report(100.0).rg == 0.0
+
+
+def test_multi_emitter_shared_capacity():
+    """Two emitters share one ledger: capacities add, streams merge."""
+    led = GoodputLedger()
+    led.add_capacity(1000.0)
+    led.add_capacity(3000.0)
+    led.emit("sim_job", Phase.STEP, 0.0, 100.0, chips=10)
+    led.emit("orc_job", Phase.IDLE, 0.0, 100.0, chips=10)
+    rep = led.report()
+    assert rep.capacity_chip_time == 4000.0
+    assert rep.sg == pytest.approx(0.5)
+    assert rep.rg == pytest.approx(0.5)

@@ -1,0 +1,82 @@
+"""Serve-layer tests: tail-batch padding correctness (the double-count
+bug) and the serve-side goodput emitter (QUEUED/INIT/STEP/IDLE)."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.goodput import Phase
+from repro.core.ledger import GoodputLedger
+from repro.launch.serve import Request, Server, pad_group
+
+
+def test_pad_group_uses_sentinel_clones():
+    reqs = [Request(i, np.zeros(4, np.int32), 8) for i in range(2)]
+    padded = pad_group(reqs, 4)
+    assert len(padded) == 4
+    assert [r.rid for r in padded[:2]] == [0, 1]
+    assert all(r.is_pad for r in padded[2:])
+    # clones must not share mutable state with the real requests
+    padded[2].out_tokens.append(123)
+    assert reqs[0].out_tokens == []
+
+
+def test_pad_group_fills_tiny_tail_to_full_width():
+    """A tail smaller than half the batch still pads to full width (the
+    clone source cycles), keeping the compiled batch shape stable."""
+    reqs = [Request(0, np.zeros(4, np.int32), 8)]
+    padded = pad_group(reqs, 8)
+    assert len(padded) == 8
+    assert sum(r.is_pad for r in padded) == 7
+
+
+def test_pad_group_full_batch_unchanged():
+    reqs = [Request(i, np.zeros(4, np.int32), 8) for i in range(4)]
+    assert pad_group(reqs, 4) == reqs
+
+
+@pytest.fixture(scope="module")
+def smoke_server():
+    from repro.configs import get_smoke
+
+    cfg = get_smoke("smollm-135m")
+    ledger = GoodputLedger(window=60.0)
+    server = Server(cfg, batch=4, prompt_len=8, max_len=12, ledger=ledger)
+    return cfg, server, ledger
+
+
+def _requests(cfg, n, prompt_len=8, max_new=4):
+    rng = np.random.default_rng(0)
+    return [Request(i, rng.integers(0, cfg.vocab_size,
+                                    prompt_len).astype(np.int32),
+                    max_new, t_submit=time.monotonic())
+            for i in range(n)]
+
+
+def test_padded_tail_batch_not_double_counted(smoke_server):
+    """6 requests at batch 4: the tail batch carries 2 sentinel pads.
+    Before the fix the duplicated Request objects got tokens appended
+    twice and t_first/t_done overwritten, inflating throughput."""
+    cfg, server, _ = smoke_server
+    reqs = _requests(cfg, 6)
+    for i in range(0, len(reqs), 4):
+        server.run_batch(pad_group(reqs[i:i + 4], 4))
+    assert all(len(r.out_tokens) == r.max_new for r in reqs)
+    assert sum(len(r.out_tokens) for r in reqs) == 6 * 4
+    assert all(r.t_done >= r.t_first > 0 for r in reqs)
+
+
+def test_serve_emits_all_accounting_phases(smoke_server):
+    cfg, server, ledger = smoke_server
+    before = ledger.n_events
+    reqs = _requests(cfg, 3)          # batch of 4 -> one pad slot
+    server.run_batch(pad_group(reqs, 4))
+    assert ledger.n_events > before
+    for phase in (Phase.QUEUED, Phase.INIT, Phase.STEP, Phase.IDLE):
+        assert ledger.phase_chip_time(phase) > 0.0, phase
+    bd = ledger.rg_breakdown()
+    assert "step" in bd and "idle" in bd
+    assert sum(bd.values()) == pytest.approx(1.0)
+    # serve segment tagging feeds the fleet-wide phase_kind split (Fig. 15)
+    by = ledger.segment_report("phase_kind", {"serve": 1.0})
+    assert "serve" in by
