@@ -14,7 +14,7 @@ import traceback
 from benchmarks import (fig4_job_sizes, fig12_pg_compiler,
                         fig14_rg_optimizations, fig15_rg_phases,
                         fig16_sg_by_size, ledger_scale, overlap_speedup,
-                        roofline, table2_mpg_composition)
+                        roofline, scenario_sweep, table2_mpg_composition)
 
 BENCHES = [
     ("fig4_job_sizes", fig4_job_sizes.main),
@@ -24,6 +24,7 @@ BENCHES = [
     ("fig16_sg_by_size", fig16_sg_by_size.main),
     ("table2_mpg_composition", table2_mpg_composition.main),
     ("ledger_scale", ledger_scale.main),
+    ("scenario_sweep", scenario_sweep.main),
     ("overlap_speedup", overlap_speedup.main),
     ("roofline_table", roofline.main),
 ]

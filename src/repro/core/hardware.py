@@ -24,6 +24,29 @@ TPU_V5E = ChipSpec(
     ici_links=4,
 )
 
+# Older / newer generations the heterogeneous-fleet scenarios mix in
+# (paper §3.1: the fleet spans several TPU generations at once; per-chip
+# peak FLOPS is what Program Goodput normalizes against).
+TPU_V4 = ChipSpec(
+    name="tpu-v4",
+    peak_flops_bf16=275e12,
+    hbm_bw=1228e9,
+    hbm_bytes=32 * 1024 ** 3,
+    ici_link_bw=50e9,
+    ici_links=6,
+)
+
+TPU_V5P = ChipSpec(
+    name="tpu-v5p",
+    peak_flops_bf16=459e12,
+    hbm_bw=2765e9,
+    hbm_bytes=95 * 1024 ** 3,
+    ici_link_bw=100e9,
+    ici_links=6,
+)
+
+GENERATIONS = {c.name: c for c in (TPU_V4, TPU_V5E, TPU_V5P)}
+
 # Cross-pod (DCN) bandwidth per chip — used by the fleet simulator for
 # multi-pod gradient all-reduces (pod axis).
 DCN_BW_PER_CHIP = 6.25e9  # bytes/s

@@ -101,11 +101,19 @@ class GoodputLedger:
         # pg_by_job table supplied *after* the stream (legacy API shape)
         self._job_productive: Dict[str, float] = defaultdict(float)
         self._subscribers: List[Callable[[Interval], None]] = []
+        self._event_subscribers: List[Callable[[Interval, float], None]] = []
 
     # ---- event ingestion --------------------------------------------------
     def subscribe(self, fn: Callable[[Interval], None]) -> None:
         """Call ``fn(interval)`` on every recorded event."""
         self._subscribers.append(fn)
+
+    def subscribe_events(self, fn: Callable[[Interval, float], None]) -> None:
+        """Call ``fn(interval, pg)`` on every recorded event — the pg-aware
+        hook trace recorders need (``repro.fleet.trace``): replaying the
+        observed ``(interval, pg)`` stream reproduces this ledger's totals
+        bit-for-bit."""
+        self._event_subscribers.append(fn)
 
     def add_capacity(self, chip_time: float) -> None:
         """Add an emitter's capacity to the SG denominator (multi-cluster)."""
@@ -128,6 +136,8 @@ class GoodputLedger:
             self.intervals.append(iv)
         for fn in self._subscribers:
             fn(iv)
+        for fn in self._event_subscribers:
+            fn(iv, pg)
 
     def emit(self, job_id: str, phase: Phase, t0: float, t1: float,
              chips: int, segment: Optional[Dict[str, str]] = None,
@@ -231,6 +241,22 @@ class GoodputLedger:
                         "productive_chip_time": rep.productive_chip_time,
                         "ideal_chip_time": rep.ideal_chip_time})
         return out
+
+    def totals(self) -> Dict[str, object]:
+        """The exact accumulator state a trace replay must reproduce
+        bit-for-bit: event count, capacity, the three MPG chip-time sums,
+        and the per-phase split.  Floats are returned unrounded (and
+        serialize exactly through JSON's shortest-roundtrip repr), so
+        golden-trace tests can assert ``replayed.totals() == trace.totals``
+        with plain equality."""
+        return {
+            "n_events": self.n_events,
+            "capacity_chip_time": self.capacity_chip_time,
+            "allocated_chip_time": self._totals.allocated,
+            "productive_chip_time": self._totals.productive,
+            "ideal_chip_time": self._totals.ideal,
+            "by_phase": dict(self._totals.phase),
+        }
 
     # ---- introspection ----------------------------------------------------
     def state_size(self) -> Dict[str, int]:

@@ -4,4 +4,10 @@ from repro.fleet.policies import (DEFRAG_POLICIES,  # noqa: F401
                                   PLACEMENT_POLICIES, PREEMPTION_POLICIES,
                                   DefragPolicy, PlacementPolicy,
                                   PreemptionPolicy)
+from repro.fleet.scenarios import (SCENARIOS, Scenario,  # noqa: F401
+                                   build_sim, golden_sim)
 from repro.fleet.sim import FleetSim, SimConfig  # noqa: F401
+
+# repro.fleet.trace is intentionally not re-exported here: it doubles as
+# the `python -m repro.fleet.trace` CLI, and importing it from the package
+# __init__ would trigger runpy's double-import warning on every CLI use.

@@ -159,6 +159,16 @@ class Cluster:
             for pid in alloc.pods:
                 self.pods[pid].release(0)
 
+    def reserve_pod(self, pod_id: int, tag: str) -> None:
+        """Take a whole (empty) pod out of service under a sentinel
+        allocation — a scheduled-maintenance drain.  The pod must be fully
+        free (the sim drains its occupants first); ``release(tag)`` returns
+        it to service."""
+        off = self.pods[pod_id].alloc(self.pod_size)
+        if off is None:
+            raise RuntimeError(f"pod {pod_id} not drained; cannot reserve")
+        self.allocations[tag] = Allocation(tag, pod_id, off, self.pod_size)
+
     def pod_jobs(self, pod_id: int) -> List[str]:
         return [j for j, a in self.allocations.items()
                 if a.pod == pod_id or pod_id in a.pods]

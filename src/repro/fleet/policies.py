@@ -129,6 +129,9 @@ class PreemptionPolicy:
             occupants = sim.cluster.pod_jobs(pod.pod_id)
             cost, ok = 0.0, True
             for j in occupants:
+                if j not in sim.jobs:        # maintenance reservation
+                    ok = False
+                    break
                 v = sim.jobs[j]
                 if v.spec.chips > sim.cfg.pod_size:   # another XL: immovable
                     ok = False
@@ -209,15 +212,29 @@ class DefragPolicy:
     # -- shared helpers ----------------------------------------------------
     @staticmethod
     def _xl_drain_target(sim) -> Tuple[int, ...]:
-        """Emptiest pods covering the largest queued multi-pod job."""
+        """Emptiest pods covering the largest queued multi-pod job.
+
+        Only *serviceable* pods count: pods under a maintenance
+        reservation (sentinel allocations with no backing job) can be
+        neither drained nor granted, and a job needing more pods than
+        are currently serviceable is ignored — draining for a job that
+        cannot fit would exclude every pod from scheduling and deadlock
+        the fleet (found by the tiny golden-trace configs, where the
+        workload can emit cluster-sized requests).
+        """
         pod_size = sim.cfg.pod_size
+        reserved = {a.pod for tag, a in sim.cluster.allocations.items()
+                    if tag not in sim.jobs and a.pod >= 0}
+        serviceable = [p for p in sim.cluster.pods
+                       if p.pod_id not in reserved]
+        max_chips = len(serviceable) * pod_size
         xl_need = max((sim.jobs[j].spec.chips // pod_size
                        for j in sim.queue
-                       if sim.jobs[j].spec.chips > pod_size), default=0)
+                       if pod_size < sim.jobs[j].spec.chips <= max_chips),
+                      default=0)
         if xl_need == 0:
             return ()
-        by_emptiness = sorted(sim.cluster.pods,
-                              key=lambda p: -p.free_chips())
+        by_emptiness = sorted(serviceable, key=lambda p: -p.free_chips())
         return tuple(p.pod_id for p in by_emptiness[:xl_need])
 
     @staticmethod

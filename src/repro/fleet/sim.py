@@ -26,15 +26,21 @@ import heapq
 import math
 import random
 from collections import defaultdict
-from typing import Dict, List, Optional, Tuple, Union
+from typing import TYPE_CHECKING, Dict, List, Optional, Tuple, Union
 
-from repro.core.goodput import Interval, Phase
+from repro.core.goodput import Interval, Phase, generation_pg_weights
 from repro.core.ledger import GoodputLedger
 from repro.fleet.cluster import Cluster
 from repro.fleet.job import JobRuntime, JobSpec
 from repro.fleet.policies import (DefragPolicy, PlacementPolicy,
                                   PreemptionPolicy, resolve_defrag,
                                   resolve_placement, resolve_preemption)
+
+if TYPE_CHECKING:                     # import cycle: scenarios builds sims
+    from repro.fleet.scenarios import Scenario
+
+MAINT_TAG = "__maint__"               # sentinel allocation id prefix for
+                                      # drained (in-maintenance) pods
 
 
 @dataclasses.dataclass
@@ -60,6 +66,9 @@ class SimConfig:
     # accounting
     retain_intervals: bool = True            # keep raw Interval list
     ledger_window: float = 3600.0            # MPG time-series bucket (s)
+    # fleet conditions (diurnal load, maintenance drains, failure bursts,
+    # heterogeneous pod generations) — see repro.fleet.scenarios
+    scenario: Optional["Scenario"] = None
 
 
 class FleetSim:
@@ -88,6 +97,31 @@ class FleetSim:
         self.placement = resolve_placement(cfg.placement)
         self.preemption = resolve_preemption(preemption)
         self.defrag = resolve_defrag(cfg.defrag)
+        # scenario conditions (repro.fleet.scenarios).  Randomness that a
+        # scenario introduces runs on its own seeded stream so composing a
+        # modifier cannot perturb the base failure/workload streams — the
+        # determinism audit's per-component-rng rule.
+        self.pod_generation: List[str] = ["tpu-v5e"] * cfg.n_pods
+        self.pod_factor: List[float] = [1.0] * cfg.n_pods
+        self._mtbf_factor = 1.0
+        self._burst_rng = random.Random(f"{cfg.seed}:bursts")
+        self._maint_depth: Dict[int, int] = defaultdict(int)
+        scn = cfg.scenario
+        if scn is not None:
+            self._mtbf_factor = scn.mtbf_factor
+            if scn.pod_generations:
+                gens = [scn.pod_generations[i % len(scn.pod_generations)]
+                        for i in range(cfg.n_pods)]
+                weights = generation_pg_weights(gens)
+                self.pod_generation = gens
+                self.pod_factor = [weights[g] for g in gens]
+            for mw in scn.maintenance:
+                pid = mw.pod % cfg.n_pods
+                self._push(mw.start_frac * cfg.horizon, "maint_start",
+                           str(pid))
+                self._push(mw.end_frac * cfg.horizon, "maint_end", str(pid))
+            for idx, burst in enumerate(scn.bursts):
+                self._push(burst.at_frac * cfg.horizon, "burst", str(idx))
         # accounting: one streaming ledger, optionally shared fleet-wide
         self.ledger = ledger if ledger is not None else GoodputLedger(
             window=cfg.ledger_window,
@@ -113,17 +147,39 @@ class FleetSim:
         self._push(spec.arrival, "arrival", spec.job_id)
 
     # ---- interval ledger -------------------------------------------------
-    def _emit(self, job: JobRuntime, phase: Phase, t0: float, t1: float):
+    def _emit(self, job: JobRuntime, phase: Phase, t0: float, t1: float,
+              gen: Optional[Tuple[str, float]] = None):
         if t1 <= t0:
             return
         s = job.spec
-        self.ledger.emit(
-            job_id=s.job_id, phase=phase, t0=t0, t1=t1, chips=s.chips,
-            segment={
-                "size_class": s.size_class, "phase_kind": s.phase_kind,
-                "arch": s.arch, "framework": s.framework,
-                "ckpt": "async" if s.async_checkpoint else "sync",
-            }, pg=s.pg)
+        segment = {
+            "size_class": s.size_class, "phase_kind": s.phase_kind,
+            "arch": s.arch, "framework": s.framework,
+            "ckpt": "async" if s.async_checkpoint else "sync",
+            "layer": "fleet",
+        }
+        pg = s.pg
+        if gen is not None:
+            # heterogeneous fleet: ideal time normalizes to the best
+            # generation present, so STEP on a slower pod carries a lower
+            # effective PG (paper §3.1 / §4.2)
+            segment["generation"] = gen[0]
+            pg = s.pg * gen[1]
+        self.ledger.emit(job_id=s.job_id, phase=phase, t0=t0, t1=t1,
+                         chips=s.chips, segment=segment, pg=pg)
+
+    def _gen_of(self, job_id: str) -> Tuple[str, float]:
+        """(generation name, PG weight) of a job's current allocation;
+        multi-pod slices average their pods' weights."""
+        alloc = self.cluster.allocations.get(job_id)
+        if alloc is None:
+            return "tpu-v5e", 1.0
+        if alloc.pod >= 0:
+            return self.pod_generation[alloc.pod], self.pod_factor[alloc.pod]
+        gens = {self.pod_generation[p] for p in alloc.pods}
+        factor = (sum(self.pod_factor[p] for p in alloc.pods)
+                  / len(alloc.pods))
+        return (gens.pop() if len(gens) == 1 else "mixed"), factor
 
     # ---- productive-rate model -------------------------------------------
     def _rates(self, s: JobSpec) -> Tuple[float, float, float]:
@@ -156,6 +212,8 @@ class FleetSim:
             for job_id in list(self.cluster.pod_jobs(pid)):
                 if migrated >= self.cfg.drain_cap:  # churn cap per event
                     break
+                if job_id not in self.jobs:   # maintenance reservation
+                    continue
                 v = self.jobs[job_id]
                 if v.spec.chips > 64:   # migrate only small/medium
                     continue
@@ -264,24 +322,32 @@ class FleetSim:
         self._requeued.discard(s.job_id)
         self._epoch[s.job_id] += 1
         epoch = self._epoch[s.job_id]
+        gen = self._gen_of(s.job_id)
+        assembly = 0.0
         if s.size_class == "xl":
             assembly = self.cfg.xl_assembly_per_pod * (s.chips // self.cfg.pod_size)
-            self._emit(job, Phase.PARTIAL, t, t + assembly)
             t += assembly
         init = s.effective_init()
-        self._emit(job, Phase.INIT, t, t + init)
         t += init
 
         step_f, ckpt_f, stall_f = self._rates(s)
-        wall_needed = job.remaining / (s.chips * step_f)
+        # work rate in reference chip-seconds: slower generations do
+        # proportionally less of the job's work per allocated second
+        wall_needed = job.remaining / (s.chips * gen[1] * step_f)
         end = t + wall_needed
 
-        # failure sampling over the allocated slice
-        rate = s.chips / self.cfg.chip_mtbf
+        # failure sampling over the allocated slice (scenario MTBF shocks
+        # scale the base rate)
+        rate = s.chips / (self.cfg.chip_mtbf * self._mtbf_factor)
         t_fail = t + self.rng.expovariate(rate) if rate > 0 else math.inf
 
-        seg = {"t_run0": t, "epoch": epoch, "step_f": step_f,
-               "ckpt_f": ckpt_f, "stall_f": stall_f}
+        # assembly/INIT intervals are emitted at segment *close* (clipped
+        # to the stop time), so a kill that lands mid-setup — preemption,
+        # maintenance drain, failure burst — cannot leave phantom
+        # allocated chip-time beyond the kill (or the horizon)
+        seg = {"t_sched": self.now, "assembly": assembly, "init": init,
+               "t_run0": t, "epoch": epoch, "step_f": step_f,
+               "ckpt_f": ckpt_f, "stall_f": stall_f, "gen": gen}
         self.running[s.job_id] = seg
         job.started = self.now
         if t_fail < min(end, self.cfg.horizon):
@@ -297,16 +363,27 @@ class FleetSim:
         if seg is None:
             return
         t0 = seg["t_run0"]
+        gen = seg["gen"]
+        # setup phases, clipped to the actual stop time
+        t_setup = seg["t_sched"]
+        if seg["assembly"] > 0:
+            self._emit(job, Phase.PARTIAL, t_setup,
+                       min(self.now, t_setup + seg["assembly"]))
+            t_setup += seg["assembly"]
+        if seg["init"] > 0:
+            self._emit(job, Phase.INIT, t_setup,
+                       min(self.now, t_setup + seg["init"]), gen=gen)
         dur = max(0.0, self.now - t0)
         step_t = dur * seg["step_f"]
         ckpt_t = dur * seg["ckpt_f"]
         stall_t = dur * seg["stall_f"]
-        work = step_t * s.chips
+        work_rate = s.chips * gen[1]       # reference chip-s per step-second
+        work = step_t * work_rate
 
         # checkpoint survival: work since last checkpoint boundary is lost
         # on failure/preemption (paper §4.3 RG definition)
         cycles = int(step_t // s.checkpoint_interval)
-        survived = min(work, cycles * s.checkpoint_interval * s.chips)
+        survived = min(work, cycles * s.checkpoint_interval * work_rate)
         if lost:
             lost_work = work - survived
             credited = survived
@@ -315,20 +392,71 @@ class FleetSim:
             credited = work
 
         t = t0
-        good_t = credited / s.chips
-        lost_t = lost_work / s.chips
-        self._emit(job, Phase.STEP, t, t + good_t)
+        good_t = credited / work_rate
+        lost_t = lost_work / work_rate
+        self._emit(job, Phase.STEP, t, t + good_t, gen=gen)
         t += good_t
         if lost_t > 0:
-            self._emit(job, Phase.LOST, t, t + lost_t)
+            self._emit(job, Phase.LOST, t, t + lost_t, gen=gen)
             t += lost_t
         if ckpt_t > 0:
-            self._emit(job, Phase.CHECKPOINT, t, t + ckpt_t)
+            self._emit(job, Phase.CHECKPOINT, t, t + ckpt_t, gen=gen)
             t += ckpt_t
         if stall_t > 0:
-            self._emit(job, Phase.DATA_STALL, t, t + stall_t)
+            self._emit(job, Phase.DATA_STALL, t, t + stall_t, gen=gen)
         job.remaining = max(0.0, job.remaining - credited)
         job.checkpointed += credited
+
+    # ---- scenario events ---------------------------------------------------
+    def _begin_maintenance(self, pod_id: int):
+        """Scheduled maintenance: checkpoint-drain every occupant of the
+        pod, then reserve it whole under a sentinel allocation until the
+        window's ``maint_end``.  The lost capacity surfaces as SG loss
+        (the denominator stays fleet-wide), and drained jobs' waits are
+        PARTIAL — a scheduler-induced gap, not initial queueing.
+
+        Overlapping windows on one pod take union semantics: a depth
+        counter keeps the pod reserved until the last window ends."""
+        self._maint_depth[pod_id] += 1
+        if self._maint_depth[pod_id] > 1:      # already under maintenance
+            return
+        for job_id in list(self.cluster.pod_jobs(pod_id)):
+            if job_id not in self.jobs:        # another pod's sentinel
+                continue
+            v = self.jobs[job_id]
+            self._stop_segment(v, lost=False)  # planned: checkpoint-resume
+            self.cluster.release(job_id)
+            if v.remaining > 0:
+                self._queued_since[job_id] = self.now
+                self._requeued.add(job_id)
+                self.queue.append(job_id)
+        self.cluster.reserve_pod(pod_id, f"{MAINT_TAG}{pod_id}")
+        self._try_schedule()
+
+    def _end_maintenance(self, pod_id: int):
+        self._maint_depth[pod_id] -= 1
+        if self._maint_depth[pod_id] > 0:      # a later window still holds
+            return
+        self.cluster.release(f"{MAINT_TAG}{pod_id}")
+        self._try_schedule()
+
+    def _failure_burst(self, idx: int):
+        """Correlated failure shock (power/network domain event): every
+        running job fails independently with the burst's kill fraction,
+        on the scenario's dedicated rng stream."""
+        burst = self.cfg.scenario.bursts[idx]
+        for job_id in list(self.running):
+            if self._burst_rng.random() >= burst.kill_frac:
+                continue
+            job = self.jobs[job_id]
+            job.failures += 1
+            self._stop_segment(job, lost=True)
+            self.cluster.release(job_id)
+            if job.remaining > 0:
+                self._queued_since[job_id] = self.now
+                self._requeued.add(job_id)
+                self.queue.append(job_id)
+        self._try_schedule()
 
     # ---- event loop -------------------------------------------------------
     def run(self):
@@ -347,6 +475,12 @@ class FleetSim:
                 self._queued_since[payload] = t
                 self.queue.append(payload)
                 self._try_schedule()
+            elif kind == "maint_start":
+                self._begin_maintenance(int(payload))
+            elif kind == "maint_end":
+                self._end_maintenance(int(payload))
+            elif kind == "burst":
+                self._failure_burst(int(payload))
             elif kind in ("complete", "failure"):
                 job_id, epoch = payload.rsplit(":", 1)
                 job = self.jobs[job_id]

@@ -6,7 +6,7 @@ from __future__ import annotations
 import json
 import pathlib
 import random
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 from repro.configs import ARCH_IDS
 from repro.fleet.job import JobSpec
@@ -39,6 +39,52 @@ def roofline_pg_table() -> Dict[str, float]:
     return out
 
 
+def make_warp(intensity: Callable[[float], float], span: float,
+              grid: int = 512) -> Callable[[float], float]:
+    """Build ``u -> t`` mapping uniform draws in [0, span) onto an
+    inhomogeneous arrival process with the given intensity profile, by
+    inverting the normalized cumulative intensity on a fixed grid (built
+    once here; each call is just a binary search + interpolation).
+
+    Deterministic (no rng draws): scenario arrival modulation warps the
+    *same* uniform stream the default workload consumes, so switching a
+    modulation on cannot perturb any other seeded random stream — the
+    determinism contract the trace record/replay tests rely on.
+    """
+    dt = span / grid if span > 0 else 0.0
+    cum = [0.0]
+    for i in range(grid):
+        cum.append(cum[-1] + max(0.0, intensity((i + 0.5) * dt)) * dt)
+    total = cum[-1]
+
+    def warp(u: float) -> float:
+        if span <= 0:
+            return 0.0
+        if total <= 0.0:
+            return u
+        target = (u / span) * total
+        # binary search the bracketing grid cell, interpolate linearly
+        lo, hi = 0, grid
+        while lo + 1 < hi:
+            mid = (lo + hi) // 2
+            if cum[mid] <= target:
+                lo = mid
+            else:
+                hi = mid
+        cell = cum[lo + 1] - cum[lo]
+        frac = (target - cum[lo]) / cell if cell > 0 else 0.0
+        return min(span, (lo + frac) * dt)
+
+    return warp
+
+
+def warp_times(u: float, intensity: Callable[[float], float], span: float,
+               grid: int = 512) -> float:
+    """One-shot convenience over :func:`make_warp` (grid rebuilt per call —
+    prefer ``make_warp`` inside loops)."""
+    return make_warp(intensity, span, grid)(u)
+
+
 def _pick(rng: random.Random, mix: Dict[str, float]) -> str:
     r = rng.random()
     acc = 0.0
@@ -56,7 +102,8 @@ def generate_jobs(n_jobs: int, horizon: float, seed: int = 0,
                   framework_mix: float = 0.7,
                   pg_table: Optional[Dict[str, float]] = None,
                   capacity_chips: Optional[int] = None,
-                  target_load: float = 0.70
+                  target_load: float = 0.70,
+                  arrival_profile: Optional[Callable[[float], float]] = None
                   ) -> List[JobSpec]:
     """Poisson arrivals over [0, 0.8*horizon) with the given size mix.
 
@@ -64,6 +111,11 @@ def generate_jobs(n_jobs: int, horizon: float, seed: int = 0,
     demand is ``target_load`` of fleet capacity — production fleets run
     below saturation (headroom for priority jobs, paper §3.2), and SG>95%
     (Fig. 16) is only achievable in that regime.
+
+    ``arrival_profile`` is an intensity function over absolute sim time
+    (diurnal/bursty load, ``repro.fleet.scenarios``): uniform arrival draws
+    are warped through its inverse CDF, leaving every other random choice
+    (sizes, archs, work, ...) byte-identical to the unmodulated workload.
     """
     rng = random.Random(seed)
     pg_table = pg_table if pg_table is not None else roofline_pg_table()
@@ -96,6 +148,10 @@ def generate_jobs(n_jobs: int, horizon: float, seed: int = 0,
             elastic=(phase == "train" and sc in ("medium", "large")),
             arrival=rng.uniform(0, 0.8 * horizon),
         ))
+    if arrival_profile is not None:
+        warp = make_warp(arrival_profile, 0.8 * horizon)
+        jobs = [dataclasses_replace(j, arrival=warp(j.arrival))
+                for j in jobs]
     if capacity_chips is not None:
         demand = sum(j.work for j in jobs)
         cap = capacity_chips * horizon * target_load
@@ -104,7 +160,11 @@ def generate_jobs(n_jobs: int, horizon: float, seed: int = 0,
     return jobs
 
 
-def dataclasses_replace_work(j: JobSpec, work: float) -> JobSpec:
+def dataclasses_replace(j: JobSpec, **kw) -> JobSpec:
     import dataclasses
 
-    return dataclasses.replace(j, work=work)
+    return dataclasses.replace(j, **kw)
+
+
+def dataclasses_replace_work(j: JobSpec, work: float) -> JobSpec:
+    return dataclasses_replace(j, work=work)

@@ -20,7 +20,7 @@ import argparse
 import dataclasses
 import json
 import time
-from typing import List, Optional, Tuple
+from typing import Callable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -63,11 +63,28 @@ def pad_group(group: List[Request], batch: int) -> List[Request]:
     return group + pads
 
 
+class TickClock:
+    """Deterministic stand-in for ``time.monotonic``: each call advances a
+    fixed virtual dt.  Injecting one makes the serve emitter's interval
+    stream reproducible (the determinism-audit fix for wall-clock reads),
+    so serve-layer traces can be recorded and replayed like fleet ones."""
+
+    def __init__(self, dt: float = 1.0, t0: float = 0.0):
+        self.dt = dt
+        self.t = t0
+
+    def __call__(self) -> float:
+        self.t += self.dt
+        return self.t
+
+
 class Server:
     def __init__(self, cfg, batch: int, prompt_len: int, max_len: int,
-                 ledger: Optional[GoodputLedger] = None):
+                 ledger: Optional[GoodputLedger] = None,
+                 clock: Callable[[], float] = time.monotonic):
         self.cfg = cfg
         self.batch = batch
+        self.clock = clock
         self.ledger = ledger if ledger is not None else GoodputLedger()
         self.params = model.init_params(cfg, jax.random.key(0))
         self.prefill = jax.jit(
@@ -80,13 +97,14 @@ class Server:
         self.ledger.emit(job_id=f"req{rid}" if rid >= 0 else "pad",
                          phase=phase, t0=t0, t1=t1, chips=chips,
                          segment={"phase_kind": "serve",
-                                  "arch": self.cfg.name})
+                                  "arch": self.cfg.name,
+                                  "layer": "serve"})
 
     def run_batch(self, reqs: List[Request]) -> Tuple[float, float]:
         real = [r for r in reqs if not r.is_pad]
         n_pad = len(reqs) - len(real)
         toks = np.stack([r.prompt for r in reqs])
-        t0 = time.monotonic()
+        t0 = self.clock()
         for r in real:                       # queue wait: submit -> batch
             self._emit(r.rid, Phase.QUEUED, r.t_submit, t0)
         batch = {"tokens": jnp.asarray(toks)}
@@ -100,11 +118,11 @@ class Server:
                 self.cfg.compute_dtype)
         logits, cache = self.prefill(self.params, batch)
         tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        t_prefill = time.monotonic() - t0
+        t_prefill = self.clock() - t0
         for r, t in zip(reqs, np.asarray(tok)):
             r.out_tokens.append(int(t))
             if not r.is_pad:
-                r.t_first = time.monotonic()
+                r.t_first = self.clock()
         # prefill is program setup for the batch: INIT for live slots,
         # IDLE for the padded ones (a batch-shape bubble)
         self._emit(real[0].rid if real else -1, Phase.INIT,
@@ -112,7 +130,7 @@ class Server:
         if n_pad:
             self._emit(-1, Phase.IDLE, t0, t0 + t_prefill, chips=n_pad)
         max_new = max(r.max_new for r in reqs)
-        t1 = time.monotonic()
+        t1 = self.clock()
         for _ in range(max_new - 1):
             logits, cache = self.decode(self.params, tok, cache)
             tok = jnp.argmax(logits, -1).astype(jnp.int32)
@@ -120,11 +138,11 @@ class Server:
                 if len(r.out_tokens) < r.max_new:
                     r.out_tokens.append(int(t))
         jax.block_until_ready(tok)
-        t_decode = time.monotonic() - t1
+        t_decode = self.clock() - t1
         t2 = t1 + t_decode
         iters = max(max_new - 1, 1)
         for r in real:
-            r.t_done = time.monotonic()
+            r.t_done = self.clock()
             # STEP for the decode iterations this request consumed, IDLE
             # for the bubble riding out the batch's longest request
             frac = (len(r.out_tokens) - 1) / iters

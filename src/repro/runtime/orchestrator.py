@@ -68,7 +68,8 @@ class Orchestrator:
         self.ledger.emit(
             job_id=r.job_id, phase=phase, t0=t0, t1=t1, chips=r.chips,
             segment={"arch": self.cfg.name, "phase_kind": "train",
-                     "ckpt": "async" if r.async_checkpoint else "sync"})
+                     "ckpt": "async" if r.async_checkpoint else "sync",
+                     "layer": "runtime"})
 
     # ------------------------------------------------------------------
     def _build(self):

@@ -1,0 +1,90 @@
+"""Golden-trace regression suite.
+
+One tiny recorded trace per scenario preset lives in ``tests/golden/``.
+Three guarantees per preset:
+
+  * replaying the stored trace reproduces its recorded ledger totals
+    (the stored MPG composition) *exactly* — bit-for-bit, no approx;
+  * re-simulating the preset at the golden configuration produces a
+    byte-identical trace — any simulator behaviour change trips this,
+    and an intentional change is blessed via
+    ``python -m repro.fleet.trace --refresh-golden``;
+  * the same seed run twice in-process yields identical bytes (the
+    determinism-audit contract: no shared random-module state, no
+    dict-order dependence, no wall-clock reads in the sim path).
+"""
+import pathlib
+
+import pytest
+
+from repro.core.goodput import GoodputReport
+from repro.fleet.scenarios import SCENARIOS, golden_sim
+from repro.fleet.trace import TRACE_VERSION, Trace, record, replay, verify
+
+GOLDEN = pathlib.Path(__file__).parent / "golden"
+PRESETS = sorted(SCENARIOS)
+
+
+def test_every_preset_has_a_golden_trace():
+    missing = [p for p in PRESETS if not (GOLDEN / f"{p}.jsonl").exists()]
+    assert not missing, (
+        f"no golden trace for preset(s) {missing}; run "
+        "`PYTHONPATH=src python -m repro.fleet.trace --refresh-golden`")
+    stray = sorted(f.stem for f in GOLDEN.glob("*.jsonl")
+                   if f.stem not in PRESETS)
+    assert not stray, f"golden trace(s) without a preset: {stray}"
+
+
+@pytest.mark.parametrize("preset", PRESETS)
+def test_replay_reproduces_recorded_totals_exactly(preset):
+    trace = Trace.load(GOLDEN / f"{preset}.jsonl")
+    assert trace.version == TRACE_VERSION
+    assert trace.meta["scenario"] == preset
+    replayed = replay(trace)
+    # plain equality: every float must reproduce bit-for-bit
+    assert replayed.totals() == trace.totals
+    verify(trace)   # the CLI-facing check agrees
+
+
+@pytest.mark.parametrize("preset", PRESETS)
+def test_resimulated_trace_is_byte_identical(preset):
+    stored = (GOLDEN / f"{preset}.jsonl").read_text()
+    fresh = record(golden_sim(preset)).dumps()
+    assert fresh == stored, (
+        f"simulator behaviour changed for preset {preset!r}; if "
+        "intentional, refresh with `PYTHONPATH=src python -m "
+        "repro.fleet.trace --refresh-golden`")
+
+
+def test_same_seed_twice_is_identical():
+    a = record(golden_sim("peak_week")).dumps()
+    b = record(golden_sim("peak_week")).dumps()
+    assert a == b
+
+
+@pytest.mark.parametrize("preset", PRESETS)
+def test_golden_mpg_composition_is_physical(preset):
+    trace = Trace.load(GOLDEN / f"{preset}.jsonl")
+    rep = replay(trace).report()
+    assert isinstance(rep, GoodputReport)
+    for v in (rep.sg, rep.rg, rep.pg, rep.mpg):
+        assert 0.0 <= v <= 1.0
+    assert trace.totals["n_events"] == len(trace.events)
+
+
+def test_trace_roundtrip_and_version_gate(tmp_path):
+    trace = Trace.load(GOLDEN / "steady.jsonl")
+    text = trace.dumps()
+    assert Trace.loads(text).dumps() == text
+    p = trace.dump(tmp_path / "t.jsonl")
+    assert Trace.load(p).dumps() == text
+    bumped = text.replace('"version":1', '"version":99', 1)
+    with pytest.raises(ValueError, match="version"):
+        Trace.loads(bumped)
+
+
+def test_record_refuses_a_used_ledger():
+    sim = golden_sim("steady")
+    sim.run()
+    with pytest.raises(ValueError, match="before any event"):
+        record(sim)

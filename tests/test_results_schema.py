@@ -1,0 +1,148 @@
+"""Benchmark output snapshots: every ``results/fleet/*.json`` is validated
+against a schema (required keys, value types, unit ranges), so a benchmark
+refactor cannot silently change the output shape the paper-figure
+artifacts — and anything downstream of them — depend on.
+
+The schema language is deliberately tiny (no external deps): a spec is a
+dict of key -> checker, where a checker is a type, a tuple of types, a
+callable, or a nested spec dict.  ``goodput_row`` is the shared shape for
+one SG/RG/PG/MPG composition.
+"""
+import json
+import pathlib
+
+import pytest
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "fleet"
+
+
+def unit(x):
+    return isinstance(x, (int, float)) and 0.0 <= x <= 1.0
+
+
+def positive(x):
+    return isinstance(x, (int, float)) and x > 0
+
+
+def non_negative(x):
+    return isinstance(x, (int, float)) and x >= 0
+
+
+def check(obj, spec, path=""):
+    """Validate ``obj`` against ``spec``; returns a list of problems."""
+    problems = []
+    if isinstance(spec, dict):
+        if not isinstance(obj, dict):
+            return [f"{path}: expected dict, got {type(obj).__name__}"]
+        for key, sub in spec.items():
+            if key not in obj:
+                problems.append(f"{path}.{key}: missing")
+            else:
+                problems += check(obj[key], sub, f"{path}.{key}")
+    elif isinstance(spec, (type, tuple)):
+        if not isinstance(obj, spec):
+            problems.append(f"{path}: expected {spec}, "
+                            f"got {type(obj).__name__}")
+    elif callable(spec):
+        if not spec(obj):
+            problems.append(f"{path}: {spec.__name__} failed for {obj!r}")
+    return problems
+
+
+def each_value(spec):
+    """Apply ``spec`` to every value of a (non-empty) dict."""
+    def _each(obj):
+        _each.problems = (
+            [f"expected non-empty dict, got {type(obj).__name__}"]
+            if not (isinstance(obj, dict) and obj) else
+            [p for v in obj.values() for p in check(v, spec)])
+        return not _each.problems
+    _each.__name__ = f"each_value({getattr(spec, '__name__', spec)})"
+    return _each
+
+
+GOODPUT_ROW = {"SG": unit, "RG": unit, "PG": unit, "MPG": unit}
+
+SCHEMAS = {
+    "fig4_job_sizes.json": {
+        "allocation_share_by_quarter":
+            lambda x: isinstance(x, list) and len(x) >= 2
+            and all(unit(v) for q in x for v in q.values()),
+    },
+    "fig12_pg_compiler.json": {
+        "n_workloads": positive, "mean_pg_before": unit,
+        "mean_pg_after": unit, "pg_uplift": positive,
+        "workloads_improved": non_negative,
+    },
+    "fig14_rg_optimizations.json": {
+        "rg_speedup_vs_baseline": each_value(positive),
+        "baseline_rg": unit,
+    },
+    "fig15_rg_phases.json": {
+        "rg_by_month": each_value(
+            lambda x: isinstance(x, list) and all(unit(v) for v in x)),
+    },
+    "fig16_sg_by_size.json": {
+        "sg_by_size": each_value(unit),
+        "sg_overall": unit,
+        "preemptions_by_size": each_value(non_negative),
+        "policy_sweep": each_value({"sg_overall": unit}),
+    },
+    "ledger_scale.json": {
+        "jobs": positive, "clusters": positive,
+        "events_streamed": positive,
+        "retained_state_entries": positive,
+        "state_size": {"retained_intervals": lambda x: x == 0},
+    },
+    "table2_mpg_composition.json": {
+        "table": each_value(GOODPUT_ROW),
+        "checks": each_value(lambda x: isinstance(x, bool)),
+    },
+    "scenario_sweep.json": {
+        "scale": str, "seed": int,
+        "policies": each_value(
+            {"placement": str, "preemption": str, "defrag": str}),
+        "scenarios": each_value(each_value({
+            **GOODPUT_ROW,
+            "preemptions": non_negative, "xl_preemptions": non_negative,
+            "failures": non_negative, "ledger_events": positive})),
+        "checks": {
+            # structural invariants must hold at any scale; directional
+            # comparisons (maintenance_lowers_sg, ...) are recorded data
+            "n_scenarios": lambda x: x >= 6,
+            "n_policy_combos": lambda x: x >= 3,
+            "all_bounded": lambda x: x is True,
+            "protect_xl_never_evicts_xl": lambda x: x is True,
+            "static_never_preempts": lambda x: x is True,
+        },
+    },
+}
+
+
+def test_every_fleet_result_has_a_schema():
+    files = sorted(p.name for p in RESULTS.glob("*.json"))
+    assert files, f"no benchmark outputs under {RESULTS}"
+    unschema = [f for f in files if f not in SCHEMAS]
+    assert not unschema, (
+        f"results/fleet file(s) without a schema: {unschema} — add one to "
+        "tests/test_results_schema.py so refactors can't silently change "
+        "their shape")
+
+
+@pytest.mark.parametrize("name", sorted(SCHEMAS))
+def test_fleet_result_matches_schema(name):
+    path = RESULTS / name
+    if not path.exists():
+        pytest.skip(f"{name} not generated in this checkout")
+    problems = check(json.loads(path.read_text()), SCHEMAS[name], name)
+    assert not problems, "\n".join(problems)
+
+
+def test_scenario_sweep_covers_the_acceptance_matrix():
+    """PR acceptance: >= 6 scenarios x 3 policy combos in the artifact."""
+    path = RESULTS / "scenario_sweep.json"
+    if not path.exists():
+        pytest.skip("scenario_sweep.json not generated in this checkout")
+    d = json.loads(path.read_text())
+    assert len(d["scenarios"]) >= 6
+    assert all(len(by_policy) >= 3 for by_policy in d["scenarios"].values())

@@ -1,0 +1,247 @@
+"""Scenario subsystem tests: preset registry, composable modifiers, and
+the physical effect of each fleet condition (maintenance drains, failure
+bursts, arrival modulation, heterogeneous generations)."""
+import dataclasses
+import math
+
+import pytest
+
+from repro.core.goodput import generation_pg_weights
+from repro.fleet.scenarios import (GOLDEN_KNOBS, SCENARIOS, ArrivalModulation,
+                                   FailureBurst, MaintenanceWindow, Scenario,
+                                   build_sim, golden_sim)
+from repro.fleet.sim import MAINT_TAG
+from repro.fleet.workload import generate_jobs, warp_times
+
+
+def _quick(scenario, seed=0, **kw):
+    knobs = dict(n_jobs=60, seed=seed, n_pods=4, pod_size=64,
+                 horizon=2 * 24 * 3600.0, retain_intervals=False)
+    knobs.update(kw)
+    sim = build_sim(scenario, **knobs)
+    sim.run()
+    return sim
+
+
+# ---------------------------------------------------------------------------
+# registry + modifiers
+# ---------------------------------------------------------------------------
+
+def test_preset_registry_has_at_least_six_named_scenarios():
+    assert len(SCENARIOS) >= 6
+    for name, scn in SCENARIOS.items():
+        assert scn.name == name
+        assert scn.description
+
+
+def test_modifiers_compose_and_do_not_mutate():
+    base = SCENARIOS["steady"]
+    combo = base.diurnal(amplitude=0.5).failure_storm(bursts=2).hetero()
+    assert base.arrival.kind == "uniform" and not base.bursts
+    assert combo.arrival.kind == "diurnal"
+    assert len(combo.bursts) == 2
+    assert combo.pod_generations
+    assert combo.mtbf_factor < 1.0
+    # frozen: in-place mutation is an error
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        combo.name = "x"
+
+
+def test_unknown_preset_and_generation_rejected():
+    with pytest.raises(ValueError, match="unknown scenario preset"):
+        golden_sim("bogus")
+    with pytest.raises(ValueError, match="generation"):
+        _quick(Scenario("bad").hetero(generations=("tpu-v99",)))
+
+
+def test_generation_pg_weights_normalize_to_best():
+    w = generation_pg_weights(["tpu-v4", "tpu-v5e", "tpu-v5p"])
+    assert max(w.values()) == 1.0
+    assert all(0.0 < v <= 1.0 for v in w.values())
+    assert w["tpu-v5p"] == 1.0            # best peak present
+    assert w["tpu-v5e"] < w["tpu-v4"]     # v4 peaks higher than v5e
+
+
+# ---------------------------------------------------------------------------
+# arrival modulation
+# ---------------------------------------------------------------------------
+
+def test_warp_preserves_span_and_monotonicity():
+    mod = ArrivalModulation(kind="diurnal", amplitude=0.8, period=86400.0)
+    span = 0.8 * 2 * 86400.0
+    us = [i * span / 50 for i in range(51)]
+    ts = [warp_times(u, mod.intensity, span) for u in us]
+    assert all(0.0 <= t <= span for t in ts)
+    assert ts == sorted(ts)               # inverse CDF is monotone
+    assert warp_times(0.0, mod.intensity, span) == pytest.approx(0.0, abs=1.0)
+
+
+def test_diurnal_concentrates_arrivals_at_peak():
+    horizon = 2 * 86400.0
+    base = generate_jobs(200, horizon, seed=1, pg_table={})
+    mod = ArrivalModulation(kind="diurnal", amplitude=0.9)
+    warped = generate_jobs(200, horizon, seed=1, pg_table={},
+                           arrival_profile=mod.intensity)
+    # everything except arrival is byte-identical to the base workload
+    for a, b in zip(base, warped):
+        assert dataclasses.replace(a, arrival=0.0) == \
+            dataclasses.replace(b, arrival=0.0)
+    # peak half-day (intensity > 1) holds more arrivals than trough half
+    def day_phase(t):
+        return math.sin(2 * math.pi * t / 86400.0 - math.pi / 2)
+    peak = sum(1 for j in warped if day_phase(j.arrival) > 0)
+    trough = len(warped) - peak
+    assert peak > trough * 1.5
+
+
+def test_bursty_modulation_clusters_arrivals():
+    horizon = 86400.0
+    mod = ArrivalModulation(kind="bursty", burst_gain=9.0,
+                            burst_every=6 * 3600.0, burst_width=1800.0)
+    jobs = generate_jobs(300, horizon, seed=2, pg_table={},
+                         arrival_profile=mod.intensity)
+    in_burst = sum(1 for j in jobs
+                   if (j.arrival % (6 * 3600.0)) < 1800.0)
+    # burst windows are ~8% of the span but attract ~45% of arrivals
+    assert in_burst / len(jobs) > 0.25
+
+
+# ---------------------------------------------------------------------------
+# maintenance windows
+# ---------------------------------------------------------------------------
+
+def test_maintenance_reserves_and_returns_the_pod():
+    scn = Scenario("m", "one window", maintenance=(
+        MaintenanceWindow(pod=0, start_frac=0.4, end_frac=0.6),))
+    sim = _quick(scn)
+    # window over: sentinel released, nothing leaks
+    assert not any(tag.startswith(MAINT_TAG)
+                   for tag in sim.cluster.allocations)
+    assert sim.cluster.free_chips() == sim.cluster.total_chips
+
+
+def test_overlapping_maintenance_windows_take_union_semantics():
+    """Two overlapping windows on one pod keep it reserved until the
+    *last* end (depth-counted), and release it exactly once."""
+    scn = Scenario("ov", "overlap", maintenance=(
+        MaintenanceWindow(pod=0, start_frac=0.3, end_frac=0.6),
+        MaintenanceWindow(pod=0, start_frac=0.5, end_frac=0.9),))
+    sim = build_sim(scn, n_jobs=30, seed=7, n_pods=2, pod_size=64,
+                    horizon=24 * 3600.0, retain_intervals=False)
+    reserved_at = {}
+    real_run = sim.run
+
+    # sample reservation state at each event by wrapping _try_schedule
+    orig = sim._try_schedule
+
+    def probe():
+        reserved_at[sim.now] = any(t.startswith(MAINT_TAG)
+                                   for t in sim.cluster.allocations)
+        orig()
+
+    sim._try_schedule = probe
+    real_run()
+    h = sim.cfg.horizon
+    # between the first end (0.6h) and the second end (0.9h) the pod must
+    # still be reserved; after 0.9h it must be free
+    mid = [r for t, r in reserved_at.items() if 0.62 * h < t < 0.88 * h]
+    late = [r for t, r in reserved_at.items() if t > 0.92 * h]
+    assert mid and all(mid)
+    assert not any(late)
+    assert sim.cluster.free_chips() == sim.cluster.total_chips
+
+
+def test_maintenance_costs_sg_on_a_busy_fleet():
+    """On a *saturated* fleet (demand > capacity, every job schedulable)
+    a drained pod is allocated chip-time lost for good, so SG drops.  On
+    an underloaded fleet the work just relocates — which is why this is
+    asserted here under saturation and only *recorded* by the sweep."""
+    mix = {"small": 0.5, "medium": 0.5}   # every size fits a 64-chip pod
+    steady = _quick(SCENARIOS["steady"].load(1.5), seed=3, size_mix=mix)
+    maint = _quick(SCENARIOS["steady"].load(1.5).maintenance_wave(
+        pods=2, start_frac=0.3, width_frac=0.25).named("maintenance"),
+        seed=3, size_mix=mix)
+    assert maint.report().sg < steady.report().sg
+
+
+# ---------------------------------------------------------------------------
+# failure bursts / MTBF shocks
+# ---------------------------------------------------------------------------
+
+def test_failure_storm_causes_more_failures_and_lost_work():
+    steady = _quick(SCENARIOS["steady"], seed=4)
+    storm = _quick(SCENARIOS["failure_storm"], seed=4)
+    f_steady = sum(j.failures for j in steady.jobs.values())
+    f_storm = sum(j.failures for j in storm.jobs.values())
+    assert f_storm > f_steady
+    from repro.core.goodput import Phase
+
+    assert storm.ledger.phase_chip_time(Phase.LOST) >= \
+        steady.ledger.phase_chip_time(Phase.LOST)
+
+
+def test_burst_kill_frac_one_fails_every_running_job():
+    scn = Scenario("k", "total burst",
+                   bursts=(FailureBurst(at_frac=0.5, kill_frac=1.1),))
+    sim = _quick(scn, seed=5)
+    assert sum(j.failures for j in sim.jobs.values()) >= 1
+
+
+def test_kill_during_setup_clips_init_no_phantom_chip_time():
+    """A burst landing while a job is still in INIT must truncate the
+    setup interval at the kill time — no phantom allocated chip-time
+    bleeding past the kill into the restarted segment's window."""
+    from repro.core.goodput import Phase
+    from repro.fleet.job import JobSpec
+    from repro.fleet.sim import FleetSim, SimConfig
+
+    horizon = 6 * 3600.0
+    burst_t = 1800.0
+    scn = Scenario("clip", "mid-init burst", bursts=(
+        FailureBurst(at_frac=burst_t / horizon, kill_frac=1.1),))
+    cfg = SimConfig(n_pods=1, pod_size=8, horizon=horizon,
+                    chip_mtbf=1e15, seed=0, scenario=scn)
+    sim = FleetSim(cfg)
+    sim.submit(JobSpec(job_id="j", chips=8, work=8 * 7200.0,
+                       init_time=3600.0, arrival=0.0,
+                       data_stall_frac=0.0))
+    sim.run()
+    inits = [iv for iv in sim.intervals if iv.phase == Phase.INIT]
+    # epoch 1's INIT is clipped at the burst, epoch 2's starts there
+    assert [(iv.t0, iv.t1) for iv in inits[:2]] == \
+        [(0.0, burst_t), (burst_t, burst_t + 3600.0)]
+    # nothing allocated overlaps the kill boundary
+    for iv in sim.intervals:
+        assert not (iv.t0 < burst_t < iv.t1)
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous generations
+# ---------------------------------------------------------------------------
+
+def test_hetero_fleet_lowers_pg_and_tags_generation():
+    steady = _quick(SCENARIOS["steady"], seed=6)
+    hetero = _quick(SCENARIOS["hetero_fleet"], seed=6)
+    assert hetero.report().pg < steady.report().pg
+    by_gen = hetero.ledger.segment_phase_chip_time("generation")
+    assert len(by_gen) >= 2               # several generations saw work
+    assert hetero.pod_factor and max(hetero.pod_factor) == 1.0
+    assert min(hetero.pod_factor) < 1.0
+
+
+# ---------------------------------------------------------------------------
+# every preset stays physical (example-based mirror of the property test)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("preset", sorted(SCENARIOS))
+def test_every_preset_keeps_goodput_terms_in_unit_range(preset):
+    sim = build_sim(SCENARIOS[preset], **GOLDEN_KNOBS)
+    sim.run()
+    rep = sim.report()
+    for v in (rep.sg, rep.rg, rep.pg, rep.mpg):
+        assert 0.0 <= v <= 1.0
+    # chip-time conservation: allocated time never exceeds capacity
+    alloc = rep.allocated_chip_time
+    assert alloc <= sim.capacity_chip_time * 1.001
+    assert rep.productive_chip_time <= alloc + 1e-9
+    assert rep.ideal_chip_time <= rep.productive_chip_time + 1e-9

@@ -7,7 +7,7 @@ import pytest
 
 from repro.core.goodput import Phase
 from repro.core.ledger import GoodputLedger
-from repro.launch.serve import Request, Server, pad_group
+from repro.launch.serve import Request, Server, TickClock, pad_group
 
 
 def test_pad_group_uses_sentinel_clones():
@@ -80,3 +80,30 @@ def test_serve_emits_all_accounting_phases(smoke_server):
     # serve segment tagging feeds the fleet-wide phase_kind split (Fig. 15)
     by = ledger.segment_report("phase_kind", {"serve": 1.0})
     assert "serve" in by
+    # cross-layer provenance: serve events carry layer=serve (trace source)
+    assert "serve" in ledger.segment_report("layer", {"serve": 1.0})
+
+
+def test_injected_tick_clock_makes_serve_accounting_deterministic():
+    """The determinism-audit fix for wall-clock reads: with a virtual
+    clock the serve emitter's interval stream — and hence the ledger
+    totals a recorded serve trace must reproduce — is identical across
+    runs."""
+    from repro.configs import get_smoke
+
+    cfg = get_smoke("smollm-135m")
+
+    def run_once():
+        clock = TickClock(dt=0.25)
+        ledger = GoodputLedger(window=60.0)
+        server = Server(cfg, batch=2, prompt_len=8, max_len=12,
+                        ledger=ledger, clock=clock)
+        reqs = [Request(i, np.full(8, i + 1, np.int32), 3,
+                        t_submit=clock()) for i in range(3)]
+        for i in range(0, len(reqs), 2):
+            server.run_batch(pad_group(reqs[i:i + 2], 2))
+        return ledger.totals()
+
+    first, second = run_once(), run_once()
+    assert first == second          # exact: every float bit-identical
+    assert first["n_events"] > 0

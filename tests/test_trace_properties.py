@@ -1,0 +1,145 @@
+"""Property-based tests for the trace/ledger pipeline (hypothesis; the
+example-based mirrors below the properties run even without it).
+
+Properties:
+  * chip-time conservation — for arbitrary event streams, every window of
+    the SG/RG/PG series satisfies ``goodput + RG-loss = allocated`` and
+    the windows sum back to the aggregate totals;
+  * ``replay(record(sim))`` is idempotent — the replayed ledger totals
+    equal the recorded footer exactly, and a second record/replay of the
+    serialized trace is byte-stable;
+  * every scenario modifier keeps SG/RG/PG in [0, 1].
+"""
+import random
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:     # property tests skip, the rest still run
+    from tests._hypothesis_fallback import given, settings, st
+
+from repro.core.goodput import (ALLOCATED_PHASES, PRODUCTIVE_PHASES,
+                                Interval, Phase)
+from repro.core.ledger import GoodputLedger
+from repro.fleet.scenarios import SCENARIOS, build_sim, golden_sim
+from repro.fleet.trace import Trace, record, replay
+
+RG_LOSS_PHASES = sorted(p.value for p in ALLOCATED_PHASES
+                        if p not in PRODUCTIVE_PHASES)
+WAIT_PHASES = sorted(p.value for p in Phase
+                     if p not in ALLOCATED_PHASES)
+
+
+# ---------------------------------------------------------------------------
+# shared assertion helpers (used by both property and example tests)
+# ---------------------------------------------------------------------------
+
+def _stream(seed, n):
+    rng = random.Random(seed)
+    phases = list(Phase)
+    out = []
+    for _ in range(n):
+        t0 = rng.uniform(0, 40_000.0)
+        out.append(Interval(
+            job_id=f"job{rng.randrange(6)}", phase=rng.choice(phases),
+            t0=t0, t1=t0 + rng.uniform(0, 9_000.0),
+            chips=rng.choice([1, 4, 64]),
+            segment={"size_class": rng.choice(("small", "xl"))}))
+    return out
+
+
+def assert_window_conservation(ledger):
+    """Per window: goodput + RG-loss chip-time = allocated chip-time, and
+    the windowed series sums back to the ledger's aggregate totals."""
+    total_alloc = total_prod = 0.0
+    for acc in ledger._windows.values():
+        prod = sum(acc.phase.get(p.value, 0.0) for p in PRODUCTIVE_PHASES)
+        loss = sum(acc.phase.get(p, 0.0) for p in RG_LOSS_PHASES)
+        assert prod + loss == pytest.approx(acc.allocated)
+        assert acc.productive == pytest.approx(prod)
+        total_alloc += acc.allocated
+        total_prod += acc.productive
+    rep = ledger.report(1.0)
+    assert total_alloc == pytest.approx(rep.allocated_chip_time)
+    assert total_prod == pytest.approx(rep.productive_chip_time)
+
+
+def assert_replay_idempotent(sim):
+    trace = record(sim)
+    first = replay(trace)
+    assert first.totals() == trace.totals          # exact, not approx
+    # serialize -> parse -> replay is just as exact, and re-serialization
+    # is byte-stable
+    text = trace.dumps()
+    parsed = Trace.loads(text)
+    assert replay(parsed).totals() == trace.totals
+    assert parsed.dumps() == text
+
+
+# ---------------------------------------------------------------------------
+# properties (hypothesis)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000),
+       st.integers(min_value=1, max_value=300))
+def test_window_series_conserves_chip_time(seed, n):
+    led = GoodputLedger(window=3600.0, retain_intervals=False)
+    pg_rng = random.Random(seed + 1)
+    for iv in _stream(seed, n):
+        led.record(iv, pg=pg_rng.uniform(0.1, 1.0))
+    assert_window_conservation(led)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=0, max_value=50))
+def test_replay_of_recorded_sim_is_idempotent(seed):
+    sim = build_sim(SCENARIOS["failure_storm"], n_jobs=10, seed=seed,
+                    n_pods=2, pod_size=32, horizon=6 * 3600.0,
+                    retain_intervals=False)
+    assert_replay_idempotent(sim)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.sampled_from(sorted(SCENARIOS)),
+       st.integers(min_value=0, max_value=20))
+def test_scenario_modifiers_keep_goodput_in_unit_range(preset, seed):
+    sim = build_sim(SCENARIOS[preset], n_jobs=12, seed=seed,
+                    n_pods=2, pod_size=32, horizon=8 * 3600.0,
+                    retain_intervals=False)
+    sim.run()
+    rep = sim.report()
+    assert 0.0 <= rep.sg <= 1.0
+    assert 0.0 <= rep.rg <= 1.0
+    assert 0.0 <= rep.pg <= 1.0
+    assert 0.0 <= rep.mpg <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# example-based mirrors (always run, hypothesis or not)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 3, 11])
+def test_window_series_conserves_chip_time_examples(seed):
+    led = GoodputLedger(window=3600.0, retain_intervals=False)
+    for iv in _stream(seed, 200):
+        led.record(iv, pg=0.5)
+    assert_window_conservation(led)
+
+
+@pytest.mark.parametrize("preset", ["steady", "maintenance", "peak_week"])
+def test_replay_idempotent_examples(preset):
+    assert_replay_idempotent(golden_sim(preset))
+
+
+def test_replay_into_shared_ledger_merges_capacity():
+    t1 = record(golden_sim("steady"))
+    t2 = record(golden_sim("bursty"))
+    merged = replay(t1)
+    merged.add_capacity(t2.capacity_chip_time)
+    replay(t2, ledger=merged)
+    assert merged.n_events == len(t1.events) + len(t2.events)
+    cap = t1.capacity_chip_time + t2.capacity_chip_time
+    assert merged.capacity_chip_time == cap
+    assert 0.0 <= merged.report().mpg <= 1.0
