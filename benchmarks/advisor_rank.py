@@ -1,0 +1,97 @@
+"""Counterfactual advisor sweep: ranked recovered-MPG reports for every
+scenario preset (paper §6–§7, the Fig 14/15 "which optimization buys the
+most goodput back" question).
+
+Every preset baseline runs with an attribution waterfall attached (each
+run asserts exact chip-time conservation against its ledger), then the
+full knob catalog is replayed on the byte-identical workload and ranked
+by recovered MPG.  Emits ``results/fleet/advisor_rank.json``.
+
+    PYTHONPATH=src python -m benchmarks.advisor_rank           # quick
+    PYTHONPATH=src python -m benchmarks.advisor_rank --full
+    PYTHONPATH=src python -m benchmarks.advisor_rank --tiny    # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import emit, save_json, timed
+from repro.fleet.advisor import KNOBS, what_if
+from repro.fleet.scenarios import GOLDEN_SIZE_MIX, SCENARIOS
+
+SCALES = {
+    # n_jobs, n_pods, pod_size, horizon
+    "tiny": dict(n_jobs=24, seed=1234, n_pods=2, pod_size=64,
+                 horizon=24 * 3600.0, size_mix=GOLDEN_SIZE_MIX),
+    "quick": dict(n_jobs=150, seed=0, n_pods=4, pod_size=256,
+                  horizon=5 * 24 * 3600.0),
+    "full": dict(n_jobs=400, seed=0, n_pods=8, pod_size=256,
+                 horizon=14 * 24 * 3600.0),
+}
+
+
+def _round_row(row: dict) -> dict:
+    return {k: (round(v, 6) if isinstance(v, float) else v)
+            for k, v in row.items()}
+
+
+def run(scale: str = "quick") -> dict:
+    knobs = SCALES[scale]
+    scenarios: dict = {}
+    for name in sorted(SCENARIOS):
+        rep = what_if(name, **knobs)
+        base = rep["baseline"]
+        wf = base["waterfall"]
+        scenarios[name] = {
+            "baseline": {k: round(base[k], 4)
+                         for k in ("SG", "RG", "PG", "MPG")},
+            "conserved": wf["conservation"]["conserved"],
+            "lost_by_layer": {k: round(v / wf["capacity_chip_time"], 4)
+                              for k, v in wf["lost_by_layer"].items()},
+            "ranking": [_round_row({k: r[k] for k in (
+                "knob", "targets", "MPG", "recovered_mpg",
+                "d_sg", "d_rg", "d_pg")}) for r in rep["ranking"]],
+        }
+
+    def recovered(preset, knob):
+        return next(r["recovered_mpg"] for r in scenarios[preset]["ranking"]
+                    if r["knob"] == knob)
+
+    checks = {
+        "n_scenarios": len(scenarios),
+        "n_knobs": len(KNOBS),
+        "all_conserved": all(s["conserved"] for s in scenarios.values()),
+        # paper Fig 14 qualitative order on the steady fleet: async
+        # checkpointing is the headline RG optimization, ahead of the
+        # compile cache and the single-controller framework migration
+        "fig14_async_leads": all(
+            recovered("steady", "async_checkpointing") >=
+            recovered("steady", other)
+            for other in ("compile_cache_warm", "single_controller")),
+        # generation upgrade is a PG knob: it only pays on hetero fleets
+        "gen_upgrade_pays_on_hetero": (
+            recovered("hetero_fleet", "generation_upgrade") >
+            recovered("steady", "generation_upgrade")),
+        # the paper-policy swap is a no-op on presets already running the
+        # paper combination (the advisor must not invent phantom gains)
+        "policy_swap_noop_on_paper_baseline":
+            recovered("steady", "scheduler_paper_policies") == 0.0,
+    }
+    return {"scale": scale, "knob_catalog": sorted(KNOBS),
+            "scenarios": scenarios, "checks": checks}
+
+
+def main(quick: bool = True, scale: str = None):
+    scale = scale or ("quick" if quick else "full")
+    res, us = timed(lambda: run(scale=scale))
+    save_json("fleet/advisor_rank.json", res)
+    emit("advisor_rank", us, res["checks"])
+    return res
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true", help="CI smoke scale")
+    ap.add_argument("--full", action="store_true", help="paper scale")
+    args = ap.parse_args()
+    main(scale="tiny" if args.tiny else ("full" if args.full else "quick"))

@@ -14,6 +14,7 @@ from __future__ import annotations
 import dataclasses
 
 from benchmarks.common import emit, save_json, timed
+from repro.core.attribution import AttributionWaterfall
 from repro.core.goodput import compute_goodput
 from repro.core.ledger import GoodputLedger
 from repro.fleet.sim import FleetSim, SimConfig
@@ -24,8 +25,10 @@ DAY = 24 * 3600.0
 
 def run(n_jobs_per_cluster: int = 2000, seed: int = 42):
     horizon = 30 * DAY
-    # heterogeneous fleet: three clusters, one shared accounting sink
+    # heterogeneous fleet: three clusters, one shared accounting sink,
+    # one attribution waterfall riding the same stream
     ledger = GoodputLedger(window=DAY, retain_intervals=False)
+    waterfall = AttributionWaterfall().attach(ledger)
     cluster_shapes = [(8, 256), (16, 256), (4, 256)]
     total_jobs = 0
     for ci, (n_pods, pod_size) in enumerate(cluster_shapes):
@@ -43,7 +46,13 @@ def run(n_jobs_per_cluster: int = 2000, seed: int = 42):
             total_jobs += 1
         sim.run()
 
+    # attribution must not change the memory story: no interval list
+    # materializes, and the waterfall keeps O(#layers x #phases) cells
     assert ledger.intervals is None, "interval list must not materialize"
+    wf_state = waterfall.state_size()
+    assert sum(wf_state.values()) < 100, (
+        f"attribution state must stay O(layers x phases): {wf_state}")
+    waterfall.assert_conserves(ledger)
     rep = ledger.report()
     state = ledger.state_size()
     series = ledger.series(
@@ -77,6 +86,13 @@ def run(n_jobs_per_cluster: int = 2000, seed: int = 42):
         "mpg": {k: round(v, 4) for k, v in rep.as_dict().items()},
         "daily_windows": len(series),
         "stream_vs_batch_max_drift": drift,
+        "attribution": {
+            "state_entries": sum(wf_state.values()),
+            "conserved": waterfall.conservation()["conserved"],
+            "lost_by_layer": {
+                k: round(v / rep.capacity_chip_time, 4)
+                for k, v in waterfall.report()["lost_by_layer"].items()},
+        },
     }
 
 

@@ -11,7 +11,7 @@ import argparse
 import sys
 import traceback
 
-from benchmarks import (fig4_job_sizes, fig12_pg_compiler,
+from benchmarks import (advisor_rank, fig4_job_sizes, fig12_pg_compiler,
                         fig14_rg_optimizations, fig15_rg_phases,
                         fig16_sg_by_size, ledger_scale, overlap_speedup,
                         roofline, scenario_sweep, table2_mpg_composition)
@@ -25,6 +25,7 @@ BENCHES = [
     ("table2_mpg_composition", table2_mpg_composition.main),
     ("ledger_scale", ledger_scale.main),
     ("scenario_sweep", scenario_sweep.main),
+    ("advisor_rank", advisor_rank.main),
     ("overlap_speedup", overlap_speedup.main),
     ("roofline_table", roofline.main),
 ]

@@ -1,0 +1,46 @@
+"""Where did the goodput go — and which fix buys the most back?
+
+Runs one scenario preset with the attribution waterfall attached, prints
+the capacity waterfall (paper §6: per-layer lost chip-time), then asks
+the what-if advisor to rank the counterfactual knob catalog by recovered
+MPG (the paper's Fig 14/15 move).
+
+    PYTHONPATH=src python examples/attribution_advisor.py [preset]
+"""
+import sys
+
+from repro.fleet.advisor import what_if
+from repro.fleet.scenarios import preset_names
+
+
+def main(preset: str = "peak_week"):
+    rep = what_if(preset, n_jobs=120, seed=0, n_pods=4, pod_size=128,
+                  horizon=3 * 24 * 3600.0)
+    base = rep["baseline"]
+    wf = base["waterfall"]
+    cap = wf["capacity_chip_time"]
+
+    print(f"=== {preset}: baseline MPG composition ===")
+    print("  " + "  ".join(f"{k}={base[k]:.3f}"
+                           for k in ("SG", "RG", "PG", "MPG")))
+
+    print("\n=== attribution waterfall (% of capacity chip-time) ===")
+    print(f"  {'ideal (goodput)':26s} {100 * wf['ideal_chip_time'] / cap:5.1f}%")
+    for row in wf["losses"]:
+        label = f"{row['layer']}/{row['bucket']}"
+        print(f"  {label:26s} {100 * row['frac_of_capacity']:5.1f}%")
+    ok = wf["conservation"]["conserved"]
+    print(f"  {'(conserves capacity)':26s} {'yes' if ok else 'NO'}")
+
+    print("\n=== what-if advisor: recovered MPG per knob ===")
+    for row in rep["ranking"]:
+        print(f"  {row['knob']:26s} {row['recovered_mpg']:+.4f} MPG "
+              f"({row['targets']}; dSG={row['d_sg']:+.3f} "
+              f"dRG={row['d_rg']:+.3f} dPG={row['d_pg']:+.3f})")
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 1 and sys.argv[1] not in preset_names():
+        raise SystemExit(f"unknown preset {sys.argv[1]!r}; "
+                         f"choose from {preset_names()}")
+    main(sys.argv[1] if len(sys.argv) > 1 else "peak_week")

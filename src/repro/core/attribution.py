@@ -1,0 +1,257 @@
+"""Cross-layer MPG attribution waterfall (paper §6, Figs 14–15).
+
+"Where did the goodput go?" — the paper answers by decomposing fleet
+capacity chip-time into productive time plus named losses, each charged
+to the stack layer responsible (model, data, framework, compiler,
+scheduling, hardware).  :class:`AttributionWaterfall` is a streaming
+subscriber on a :class:`~repro.core.ledger.GoodputLedger`: it keeps
+O(#layers x #phases) accumulator state — never an interval list — and
+maintains an *exact* partition of capacity chip-time:
+
+    capacity = ideal + program_gap + Σ layer losses + unallocated
+
+where ``program_gap = productive - ideal`` (the Program-Goodput gap,
+charged to the model layer) and ``unallocated = capacity - allocated``
+(capacity no job held, charged to the scheduling layer).  QUEUED/PARTIAL
+waiting time is *demand-side* (a job waiting does not consume capacity),
+so it is reported separately (``waits``) and excluded from the capacity
+partition — double-counting it against capacity is the classic
+conservation bug the exactness contract exists to catch.
+
+Two levels of exactness:
+
+  * the waterfall mirrors the ledger's float accumulators operation-for-
+    operation (same event stream, same order), so
+    ``assert_conserves(ledger)`` compares its totals against
+    ``ledger.totals()`` with plain ``==`` — bit-for-bit;
+  * every event's chip-time is *also* accumulated per (layer, phase)
+    cell in exact rational arithmetic (``fractions.Fraction``; floats
+    convert exactly), so "Σ buckets == allocated" is checked with no
+    rounding at all — a misrouted event cannot hide in float slack.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from fractions import Fraction
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.goodput import (ALLOCATED_PHASES, PRODUCTIVE_PHASES,
+                                Interval, Layer, Phase, layer_of,
+                                loss_bucket)
+from repro.core.ledger import GoodputLedger, _Acc
+
+
+@dataclasses.dataclass(frozen=True)
+class LossRow:
+    """One waterfall row: chip-time lost in one (layer, phase) cell."""
+    layer: str
+    phase: Optional[str]       # None for the unallocated-capacity row
+    bucket: str
+    chip_time: float
+    frac_of_capacity: float
+
+    def as_dict(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+
+class AttributionWaterfall:
+    """Streaming per-layer/per-phase lost-chip-time attribution.
+
+    Attach to a ledger *before* any event is emitted (like a trace
+    recorder) so the mirror accumulators see the identical stream::
+
+        ledger = GoodputLedger(...)
+        wf = AttributionWaterfall().attach(ledger)
+        ...emit...
+        wf.assert_conserves(ledger)       # bit-for-bit + exact partition
+        report = wf.report()
+    """
+
+    def __init__(self):
+        self._ledger: Optional[GoodputLedger] = None
+        self.n_events = 0
+        # float mirror of the ledger's aggregate accumulator — identical
+        # operations in identical order, so totals compare with plain ==
+        self._mirror = _Acc()
+        # exact per-(layer, phase) chip-time cells (capacity partition)
+        self._cells: Dict[Tuple[str, str], Fraction] = defaultdict(Fraction)
+        # exact running totals over the same addends as the cells
+        self._exact_allocated = Fraction(0)
+        self._exact_productive = Fraction(0)
+        self._exact_ideal = Fraction(0)
+        # demand-side waiting time (QUEUED/PARTIAL) per layer — reported,
+        # not part of the capacity partition
+        self._waits: Dict[Tuple[str, str], Fraction] = defaultdict(Fraction)
+
+    # ---- ingestion --------------------------------------------------------
+    def attach(self, ledger: GoodputLedger) -> "AttributionWaterfall":
+        if ledger.n_events:
+            raise ValueError(
+                "AttributionWaterfall must attach before any event is "
+                "emitted — the ledger already holds events, so the mirror "
+                "accumulators could never match ledger.totals()")
+        self._ledger = ledger
+        ledger.subscribe_events(self.on_event)
+        return self
+
+    def on_event(self, iv: Interval, pg: float) -> None:
+        ct = iv.chip_time
+        if ct <= 0.0:
+            return
+        self.n_events += 1
+        self._mirror.add(iv.phase, ct, pg)
+        layer = layer_of(iv.segment, iv.phase)
+        cell = (layer.value, iv.phase.value)
+        exact_ct = Fraction(ct)
+        if iv.phase in ALLOCATED_PHASES:
+            self._cells[cell] += exact_ct
+            self._exact_allocated += exact_ct
+            if iv.phase in PRODUCTIVE_PHASES:
+                self._exact_productive += exact_ct
+                self._exact_ideal += exact_ct * Fraction(pg)
+        else:
+            self._waits[cell] += exact_ct
+
+    # ---- conservation -----------------------------------------------------
+    @property
+    def capacity_chip_time(self) -> float:
+        return self._ledger.capacity_chip_time if self._ledger else 0.0
+
+    def conservation(self, capacity_chip_time: Optional[float] = None
+                     ) -> Dict[str, bool]:
+        """The exactness contract, checked with zero tolerance:
+
+          * ``cells_partition_allocated`` — Σ (layer, phase) cells equals
+            allocated chip-time in exact rational arithmetic, so a
+            misrouted or dropped event cannot hide in float slack (the
+            capacity identity ``ideal + gap + losses + unallocated ==
+            capacity`` then holds by construction: gap, losses and
+            unallocated are defined as the residuals);
+          * ``capacity_covers_allocated`` — a *set* capacity is at least
+            the allocated chip-time, so the derived unallocated row is
+            non-negative (this is what a mis-set capacity breaks;
+            vacuous when no capacity was ever registered, the
+            RG-only/orchestrator use);
+          * ``mirrors_ledger`` — the float mirror equals
+            ``ledger.totals()`` bit-for-bit (plain ``==`` on floats).
+        """
+        cap = Fraction(self.capacity_chip_time
+                       if capacity_chip_time is None else capacity_chip_time)
+        cells_total = sum(self._cells.values(), Fraction(0))
+        out = {
+            "cells_partition_allocated": cells_total == self._exact_allocated,
+            "capacity_covers_allocated":
+                cap == 0 or cap >= self._exact_allocated,
+            "mirrors_ledger": (self._ledger is None
+                               or self.totals_match(self._ledger)),
+        }
+        out["conserved"] = all(out.values())
+        return out
+
+    def totals_match(self, ledger: GoodputLedger) -> bool:
+        """Bit-for-bit: the float mirror reproduces ``ledger.totals()``."""
+        t = ledger.totals()
+        return (self.n_events == t["n_events"]
+                and self._mirror.allocated == t["allocated_chip_time"]
+                and self._mirror.productive == t["productive_chip_time"]
+                and self._mirror.ideal == t["ideal_chip_time"]
+                and dict(self._mirror.phase) == t["by_phase"])
+
+    def assert_conserves(self, ledger: Optional[GoodputLedger] = None
+                         ) -> None:
+        ledger = ledger if ledger is not None else self._ledger
+        if ledger is not None and not self.totals_match(ledger):
+            raise AssertionError(
+                "attribution drift: waterfall mirror != ledger.totals()\n"
+                f"  mirror: allocated={self._mirror.allocated!r} "
+                f"productive={self._mirror.productive!r} "
+                f"ideal={self._mirror.ideal!r} n={self.n_events}\n"
+                f"  ledger: {ledger.totals()!r}")
+        checks = self.conservation()
+        bad = [k for k, ok in checks.items() if not ok]
+        if bad:
+            raise AssertionError(f"attribution conservation failed: {bad}")
+
+    # ---- reporting --------------------------------------------------------
+    def lost_chip_time(self, layer: Optional[Layer] = None,
+                       phase: Optional[Phase] = None) -> float:
+        """Allocated-but-unproductive chip-time, filtered by layer and/or
+        phase (waiting time excluded — see module docstring)."""
+        total = Fraction(0)
+        for (lyr, ph), ct in self._cells.items():
+            if Phase(ph) in PRODUCTIVE_PHASES:
+                continue
+            if layer is not None and lyr != layer.value:
+                continue
+            if phase is not None and ph != phase.value:
+                continue
+            total += ct
+        return float(total)
+
+    def report(self, capacity_chip_time: Optional[float] = None
+               ) -> Dict[str, object]:
+        """The waterfall, JSON-ready: capacity decomposed into ideal,
+        program gap, named per-layer losses (sorted, largest first), and
+        unallocated capacity; demand-side waits listed separately."""
+        cap = (self.capacity_chip_time if capacity_chip_time is None
+               else capacity_chip_time)
+        fcap = cap if cap else 1.0
+        rows: List[LossRow] = []
+        for (lyr, ph), ct in sorted(self._cells.items()):
+            phase = Phase(ph)
+            if phase in PRODUCTIVE_PHASES or ct == 0:
+                continue
+            rows.append(LossRow(layer=lyr, phase=ph,
+                                bucket=loss_bucket(phase, Layer(lyr)),
+                                chip_time=float(ct),
+                                frac_of_capacity=float(ct) / fcap))
+        gap = float(self._exact_productive - self._exact_ideal)
+        if gap:
+            rows.append(LossRow(layer=Layer.MODEL.value, phase="step",
+                                bucket="program_gap", chip_time=gap,
+                                frac_of_capacity=gap / fcap))
+        # the unallocated row only exists relative to a set capacity; on
+        # a capacity-less ledger (RG-only use) it would be a meaningless
+        # negative residual
+        unalloc = float(Fraction(cap) - self._exact_allocated) if cap else 0.0
+        if unalloc:
+            rows.append(LossRow(layer=Layer.SCHEDULING.value, phase=None,
+                                bucket="unallocated_capacity",
+                                chip_time=unalloc,
+                                frac_of_capacity=unalloc / fcap))
+        rows.sort(key=lambda r: (-r.chip_time, r.layer, r.bucket))
+        by_layer: Dict[str, float] = defaultdict(float)
+        for r in rows:
+            by_layer[r.layer] += r.chip_time
+        return {
+            "capacity_chip_time": cap,
+            "allocated_chip_time": self._mirror.allocated,
+            "productive_chip_time": self._mirror.productive,
+            "ideal_chip_time": self._mirror.ideal,
+            "losses": [r.as_dict() for r in rows],
+            "lost_by_layer": dict(sorted(by_layer.items(),
+                                         key=lambda kv: -kv[1])),
+            "waits": {f"{lyr}/{ph}": float(ct)
+                      for (lyr, ph), ct in sorted(self._waits.items())
+                      if ct},
+            "conservation": self.conservation(cap),
+        }
+
+    def state_size(self) -> Dict[str, int]:
+        """Accumulator entries — bounded by #layers x #phases, not by
+        events (the ``benchmarks/ledger_scale.py`` memory story)."""
+        return {"cells": len(self._cells), "waits": len(self._waits)}
+
+
+def waterfall_from_trace(trace) -> Tuple[AttributionWaterfall, GoodputLedger]:
+    """Replay a recorded trace under a fresh waterfall; the replayed
+    ledger reproduces the trace footer bit-for-bit, so the attribution is
+    exactly the one the live run would have produced."""
+    from repro.fleet.trace import replay
+
+    ledger = GoodputLedger(capacity_chip_time=trace.capacity_chip_time,
+                           window=trace.window, retain_intervals=False)
+    wf = AttributionWaterfall().attach(ledger)
+    replay(trace, ledger=ledger)
+    return wf, ledger

@@ -30,6 +30,82 @@ class Phase(enum.Enum):
     IDLE = "idle"                    # allocated but idle (RG loss)
 
 
+class Layer(enum.Enum):
+    """Which stack layer is *responsible* for an interval (paper §3/§6).
+
+    The paper's central diagnostic move is attributing lost goodput to a
+    layer of the ML system stack, not just to a timeline phase: the same
+    LOST second is a hardware problem after a chip failure but a
+    scheduling problem after a preemption.  Every emitter
+    (``fleet.sim`` / ``runtime.orchestrator`` / ``launch.serve``) tags
+    its intervals with the responsible layer via ``segment["layer"]``;
+    the emitting subsystem itself is tagged separately as
+    ``segment["emitter"]`` (fleet / runtime / serve — trace provenance).
+    """
+    MODEL = "model"                  # the program's own compute
+    DATA = "data"                    # input pipeline
+    FRAMEWORK = "framework"          # runtime/framework (ckpt, multi-client)
+    COMPILER = "compiler"            # JIT/AOT compilation
+    SCHEDULING = "scheduling"        # placement, preemption, batching
+    HARDWARE = "hardware"            # failures, slow generations
+
+
+# the layer held responsible for a phase when the emitter did not say
+# (legacy streams, hand-built test intervals)
+DEFAULT_LAYER: Dict[Phase, Layer] = {
+    Phase.QUEUED: Layer.SCHEDULING,
+    Phase.PARTIAL: Layer.SCHEDULING,
+    Phase.INIT: Layer.FRAMEWORK,
+    Phase.STEP: Layer.MODEL,
+    Phase.CHECKPOINT: Layer.FRAMEWORK,
+    Phase.DATA_STALL: Layer.DATA,
+    Phase.LOST: Layer.HARDWARE,
+    Phase.IDLE: Layer.SCHEDULING,
+}
+
+# (Phase, Layer) -> named loss bucket: the rows of the attribution
+# waterfall (repro.core.attribution).  One phase splits into different
+# buckets by responsible layer — LOST is a failure rollback on the
+# hardware layer but a preemption rollback on the scheduling layer.
+LOSS_BUCKETS: Dict[tuple, str] = {
+    (Phase.QUEUED, Layer.SCHEDULING): "queue_wait",
+    (Phase.PARTIAL, Layer.SCHEDULING): "allocation_wait",
+    (Phase.INIT, Layer.COMPILER): "compile",
+    (Phase.INIT, Layer.FRAMEWORK): "program_setup",
+    (Phase.INIT, Layer.SCHEDULING): "migration_restart",
+    (Phase.INIT, Layer.MODEL): "warmup",
+    (Phase.CHECKPOINT, Layer.FRAMEWORK): "checkpoint_write",
+    (Phase.DATA_STALL, Layer.DATA): "input_stall",
+    (Phase.LOST, Layer.HARDWARE): "failure_rollback",
+    (Phase.LOST, Layer.SCHEDULING): "preemption_rollback",
+    (Phase.IDLE, Layer.SCHEDULING): "batch_bubble",
+    (Phase.IDLE, Layer.FRAMEWORK): "host_idle",
+}
+
+
+def layer_of(segment: Dict[str, str], phase: Phase) -> Layer:
+    """The responsible layer of an interval: its ``segment["layer"]`` tag
+    when present and valid, else the phase's default layer."""
+    tag = segment.get("layer")
+    if tag is not None:
+        try:
+            return Layer(tag)
+        except ValueError:
+            pass                      # legacy emitter tags ("fleet", ...)
+    return DEFAULT_LAYER[phase]
+
+
+def loss_bucket(phase: Phase, layer: Layer) -> Optional[str]:
+    """Waterfall bucket for a (phase, layer) cell; ``None`` for STEP
+    (productive time is not a loss).  Unmapped combinations fall back to
+    the phase's default-layer bucket name, so arbitrary streams still
+    land in a named bucket."""
+    if phase in PRODUCTIVE_PHASES:
+        return None
+    return LOSS_BUCKETS.get((phase, layer),
+                            LOSS_BUCKETS[(phase, DEFAULT_LAYER[phase])])
+
+
 @dataclasses.dataclass(frozen=True)
 class Interval:
     """A [t0, t1) span of one job on `chips` chips."""

@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.ledger import GoodputLedger
 from repro.fleet.sim import FleetSim, SimConfig
@@ -210,13 +210,19 @@ def build_sim(scenario: Scenario, *, n_jobs: int = 200, seed: int = 0,
               defrag: str = "drain_for_xl", retain_intervals: bool = False,
               ledger: Optional[GoodputLedger] = None,
               pg_table: Optional[Dict[str, float]] = None,
-              size_mix: Optional[Dict[str, float]] = None) -> FleetSim:
+              size_mix: Optional[Dict[str, float]] = None,
+              job_mutator: Optional[Callable] = None) -> FleetSim:
     """A ready-to-run ``FleetSim`` for one scenario.
 
     Hermetic by construction: the pg table defaults to ``{}`` (per-arch PG
     then comes from the workload's seeded rng, not from whatever roofline
     artifacts happen to be on disk), so the same (scenario, seed, knobs)
     always yields a byte-identical event trace.
+
+    ``job_mutator`` rewrites each generated ``JobSpec`` before submission
+    — the hook the what-if advisor (``repro.fleet.advisor``) uses to
+    apply counterfactual knobs (async checkpointing, warm compile cache,
+    ...) to an otherwise byte-identical workload.
     """
     cfg = SimConfig(n_pods=n_pods, pod_size=pod_size, horizon=horizon,
                     seed=seed, placement=placement, preemption=preemption,
@@ -231,8 +237,21 @@ def build_sim(scenario: Scenario, *, n_jobs: int = 200, seed: int = 0,
                          capacity_chips=n_pods * pod_size,
                          target_load=scenario.target_load,
                          arrival_profile=profile)
+    if job_mutator is not None:
+        jobs = [job_mutator(j) for j in jobs]
     for j in jobs:
         sim.submit(j)
+    # workload provenance, recorded into trace headers so a trace alone
+    # suffices to rebuild this exact sim (repro.fleet.advisor.from_trace).
+    # size_mix is stored as an ordered pair list: the workload's _pick
+    # walks the mix in insertion order, and trace JSON sorts dict keys —
+    # a round-tripped plain dict would silently reshuffle the workload
+    sim.workload_info = {
+        "n_jobs": n_jobs,
+        "size_mix": (None if size_mix is None
+                     else [[k, v] for k, v in size_mix.items()]),
+        "pg_table": sorted((pg_table or {}).items()),
+    }
     return sim
 
 

@@ -28,7 +28,7 @@ import random
 from collections import defaultdict
 from typing import TYPE_CHECKING, Dict, List, Optional, Tuple, Union
 
-from repro.core.goodput import Interval, Phase, generation_pg_weights
+from repro.core.goodput import Interval, Layer, Phase, generation_pg_weights
 from repro.core.ledger import GoodputLedger
 from repro.fleet.cluster import Cluster
 from repro.fleet.job import JobRuntime, JobSpec
@@ -72,7 +72,12 @@ class SimConfig:
 
 
 class FleetSim:
-    def __init__(self, cfg: SimConfig, ledger: Optional[GoodputLedger] = None):
+    def __init__(self, cfg: SimConfig, ledger: Optional[GoodputLedger] = None,
+                 keep_intervals: Optional[bool] = None):
+        """``keep_intervals`` overrides ``cfg.retain_intervals`` for the
+        auto-created ledger — the opt-out for month-scale attribution
+        runs that must stay O(1) memory (ignored when a shared ``ledger``
+        is injected; its own retention setting wins)."""
         self.cfg = cfg
         self.cluster = Cluster(cfg.n_pods, cfg.pod_size)
         self.rng = random.Random(cfg.seed)
@@ -123,9 +128,11 @@ class FleetSim:
             for idx, burst in enumerate(scn.bursts):
                 self._push(burst.at_frac * cfg.horizon, "burst", str(idx))
         # accounting: one streaming ledger, optionally shared fleet-wide
+        retain = (cfg.retain_intervals if keep_intervals is None
+                  else keep_intervals)
         self.ledger = ledger if ledger is not None else GoodputLedger(
             window=cfg.ledger_window,
-            retain_intervals=cfg.retain_intervals)
+            retain_intervals=retain)
         self.ledger.add_capacity(self.capacity_chip_time)
 
     @property
@@ -148,7 +155,7 @@ class FleetSim:
 
     # ---- interval ledger -------------------------------------------------
     def _emit(self, job: JobRuntime, phase: Phase, t0: float, t1: float,
-              gen: Optional[Tuple[str, float]] = None):
+              layer: Layer, gen: Optional[Tuple[str, float]] = None):
         if t1 <= t0:
             return
         s = job.spec
@@ -156,7 +163,7 @@ class FleetSim:
             "size_class": s.size_class, "phase_kind": s.phase_kind,
             "arch": s.arch, "framework": s.framework,
             "ckpt": "async" if s.async_checkpoint else "sync",
-            "layer": "fleet",
+            "emitter": "fleet", "layer": layer.value,
         }
         pg = s.pg
         if gen is not None:
@@ -223,7 +230,8 @@ class FleetSim:
                                         exclude=drain) is not None:
                     v.spec = dataclasses.replace(
                         v.spec, init_time=self.cfg.defrag_migration_cost)
-                    self._start_segment(v)
+                    # a migration restart's INIT is scheduling-induced
+                    self._start_segment(v, init_layer=Layer.SCHEDULING)
                 else:
                     self._queued_since[job_id] = self.now
                     self._requeued.add(job_id)
@@ -286,7 +294,7 @@ class FleetSim:
                                 v.spec.chips) is not None:
             v.spec = dataclasses.replace(
                 v.spec, init_time=self.cfg.defrag_migration_cost)
-            self._start_segment(v)
+            self._start_segment(v, init_layer=Layer.SCHEDULING)
             return True
         self._queued_since[victim] = self.now
         self._requeued.add(victim)
@@ -302,7 +310,8 @@ class FleetSim:
             return False
         for j in victims:
             v = self.jobs[j]
-            self._stop_segment(v, lost=True)
+            # preemption rollback is a scheduling-layer loss, not hardware
+            self._stop_segment(v, lost=True, lost_layer=Layer.SCHEDULING)
             self.cluster.release(j)
             v.preemptions += 1
             self._queued_since[j] = self.now
@@ -311,15 +320,22 @@ class FleetSim:
         return True
 
     # ---- run segments ----------------------------------------------------
-    def _start_segment(self, job: JobRuntime):
+    def _start_segment(self, job: JobRuntime,
+                       init_layer: Optional[Layer] = None):
+        """``init_layer`` attributes this start's INIT time: scheduling
+        for defrag/migration restarts; otherwise compiler for a cold
+        compile and framework when the AOT cache skips it."""
         s = job.spec
         t = self.now
         q0 = self._queued_since.pop(s.job_id, None)
         if q0 is not None and t > q0:
             wait_phase = (Phase.PARTIAL if s.job_id in self._requeued
                           else Phase.QUEUED)
-            self._emit(job, wait_phase, q0, t)
+            self._emit(job, wait_phase, q0, t, layer=Layer.SCHEDULING)
         self._requeued.discard(s.job_id)
+        if init_layer is None:
+            init_layer = (Layer.FRAMEWORK if s.compile_cache_hit
+                          else Layer.COMPILER)
         self._epoch[s.job_id] += 1
         epoch = self._epoch[s.job_id]
         gen = self._gen_of(s.job_id)
@@ -346,8 +362,9 @@ class FleetSim:
         # maintenance drain, failure burst — cannot leave phantom
         # allocated chip-time beyond the kill (or the horizon)
         seg = {"t_sched": self.now, "assembly": assembly, "init": init,
-               "t_run0": t, "epoch": epoch, "step_f": step_f,
-               "ckpt_f": ckpt_f, "stall_f": stall_f, "gen": gen}
+               "init_layer": init_layer, "t_run0": t, "epoch": epoch,
+               "step_f": step_f, "ckpt_f": ckpt_f, "stall_f": stall_f,
+               "gen": gen}
         self.running[s.job_id] = seg
         job.started = self.now
         if t_fail < min(end, self.cfg.horizon):
@@ -356,8 +373,12 @@ class FleetSim:
             self._push(end, "complete", f"{s.job_id}:{epoch}")
         # else: runs past horizon; closed at the end of sim
 
-    def _stop_segment(self, job: JobRuntime, lost: bool):
-        """Close the running segment at self.now, crediting work."""
+    def _stop_segment(self, job: JobRuntime, lost: bool,
+                      lost_layer: Layer = Layer.HARDWARE):
+        """Close the running segment at self.now, crediting work.
+
+        ``lost_layer`` attributes the rolled-back work: hardware for
+        failures (independent and burst), scheduling for preemptions."""
         s = job.spec
         seg = self.running.pop(s.job_id, None)
         if seg is None:
@@ -368,11 +389,13 @@ class FleetSim:
         t_setup = seg["t_sched"]
         if seg["assembly"] > 0:
             self._emit(job, Phase.PARTIAL, t_setup,
-                       min(self.now, t_setup + seg["assembly"]))
+                       min(self.now, t_setup + seg["assembly"]),
+                       layer=Layer.SCHEDULING)
             t_setup += seg["assembly"]
         if seg["init"] > 0:
             self._emit(job, Phase.INIT, t_setup,
-                       min(self.now, t_setup + seg["init"]), gen=gen)
+                       min(self.now, t_setup + seg["init"]),
+                       layer=seg["init_layer"], gen=gen)
         dur = max(0.0, self.now - t0)
         step_t = dur * seg["step_f"]
         ckpt_t = dur * seg["ckpt_f"]
@@ -394,16 +417,20 @@ class FleetSim:
         t = t0
         good_t = credited / work_rate
         lost_t = lost_work / work_rate
-        self._emit(job, Phase.STEP, t, t + good_t, gen=gen)
+        self._emit(job, Phase.STEP, t, t + good_t, layer=Layer.MODEL,
+                   gen=gen)
         t += good_t
         if lost_t > 0:
-            self._emit(job, Phase.LOST, t, t + lost_t, gen=gen)
+            self._emit(job, Phase.LOST, t, t + lost_t, layer=lost_layer,
+                       gen=gen)
             t += lost_t
         if ckpt_t > 0:
-            self._emit(job, Phase.CHECKPOINT, t, t + ckpt_t, gen=gen)
+            self._emit(job, Phase.CHECKPOINT, t, t + ckpt_t,
+                       layer=Layer.FRAMEWORK, gen=gen)
             t += ckpt_t
         if stall_t > 0:
-            self._emit(job, Phase.DATA_STALL, t, t + stall_t, gen=gen)
+            self._emit(job, Phase.DATA_STALL, t, t + stall_t,
+                       layer=Layer.DATA, gen=gen)
         job.remaining = max(0.0, job.remaining - credited)
         job.checkpointed += credited
 

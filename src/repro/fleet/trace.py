@@ -2,10 +2,13 @@
 
 A trace is the cross-layer ``(Interval, pg)`` event stream observed on a
 :class:`~repro.core.ledger.GoodputLedger`, serialized one JSON object per
-line.  Every emitting layer (``FleetSim`` — ``layer: fleet``,
-``Orchestrator`` — ``layer: runtime``, the serve loop — ``layer: serve``)
-tags its segment dict, so one recorder attached to a shared ledger captures
-the whole stack and replay reconstructs per-layer sub-ledgers for free.
+line.  Every emitter (``FleetSim`` — ``emitter: fleet``, ``Orchestrator``
+— ``emitter: runtime``, the serve loop — ``emitter: serve``) tags its
+segment dict with its provenance plus the responsible stack layer
+(``layer:`` a ``repro.core.goodput.Layer`` value), so one recorder
+attached to a shared ledger captures the whole stack and replay
+reconstructs per-layer sub-ledgers — and the attribution waterfall
+(``repro.core.attribution``) — for free.
 
 Schema (version 1) — three line kinds, in file order:
 
@@ -173,6 +176,12 @@ def record(sim, meta: Optional[Dict[str, object]] = None) -> Trace:
         "placement": sim.placement.name, "preemption": sim.preemption.name,
         "defrag": sim.defrag.name,
     }
+    # workload provenance (set by scenarios.build_sim): with it, a trace
+    # alone rebuilds the exact sim — the advisor's counterfactual entry
+    # point (repro.fleet.advisor.from_trace)
+    workload = getattr(sim, "workload_info", None)
+    if workload is not None:
+        info["workload"] = workload
     info.update(meta or {})
     rec = TraceRecorder(meta=info).attach(sim.ledger)
     sim.run()

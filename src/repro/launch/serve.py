@@ -27,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, get_smoke
-from repro.core.goodput import Phase
+from repro.core.goodput import Layer, Phase
 from repro.core.ledger import GoodputLedger
 from repro.models import model, transformer
 
@@ -93,12 +93,13 @@ class Server:
         self.decode = jax.jit(model.decode_fn(cfg))
 
     def _emit(self, rid: int, phase: Phase, t0: float, t1: float,
-              chips: int = 1):
+              layer: Layer, chips: int = 1):
         self.ledger.emit(job_id=f"req{rid}" if rid >= 0 else "pad",
                          phase=phase, t0=t0, t1=t1, chips=chips,
                          segment={"phase_kind": "serve",
                                   "arch": self.cfg.name,
-                                  "layer": "serve"})
+                                  "emitter": "serve",
+                                  "layer": layer.value})
 
     def run_batch(self, reqs: List[Request]) -> Tuple[float, float]:
         real = [r for r in reqs if not r.is_pad]
@@ -106,7 +107,8 @@ class Server:
         toks = np.stack([r.prompt for r in reqs])
         t0 = self.clock()
         for r in real:                       # queue wait: submit -> batch
-            self._emit(r.rid, Phase.QUEUED, r.t_submit, t0)
+            self._emit(r.rid, Phase.QUEUED, r.t_submit, t0,
+                       layer=Layer.SCHEDULING)
         batch = {"tokens": jnp.asarray(toks)}
         if self.cfg.family == "vlm":
             batch["patches"] = jnp.zeros(
@@ -123,12 +125,15 @@ class Server:
             r.out_tokens.append(int(t))
             if not r.is_pad:
                 r.t_first = self.clock()
-        # prefill is program setup for the batch: INIT for live slots,
-        # IDLE for the padded ones (a batch-shape bubble)
+        # prefill is program setup for the batch: INIT for live slots
+        # (model-layer warmup — real forward compute, not a compile), and
+        # IDLE for the padded ones (a batch-shape bubble the batching
+        # policy — the scheduling layer — is responsible for)
         self._emit(real[0].rid if real else -1, Phase.INIT,
-                   t0, t0 + t_prefill, chips=len(real))
+                   t0, t0 + t_prefill, layer=Layer.MODEL, chips=len(real))
         if n_pad:
-            self._emit(-1, Phase.IDLE, t0, t0 + t_prefill, chips=n_pad)
+            self._emit(-1, Phase.IDLE, t0, t0 + t_prefill,
+                       layer=Layer.SCHEDULING, chips=n_pad)
         max_new = max(r.max_new for r in reqs)
         t1 = self.clock()
         for _ in range(max_new - 1):
@@ -147,10 +152,12 @@ class Server:
             # for the bubble riding out the batch's longest request
             frac = (len(r.out_tokens) - 1) / iters
             split = t1 + frac * t_decode
-            self._emit(r.rid, Phase.STEP, t1, split)
-            self._emit(r.rid, Phase.IDLE, split, t2)
+            self._emit(r.rid, Phase.STEP, t1, split, layer=Layer.MODEL)
+            self._emit(r.rid, Phase.IDLE, split, t2,
+                       layer=Layer.SCHEDULING)
         if n_pad:
-            self._emit(-1, Phase.IDLE, t1, t2, chips=n_pad)
+            self._emit(-1, Phase.IDLE, t1, t2, layer=Layer.SCHEDULING,
+                       chips=n_pad)
         return t_prefill, t_decode
 
 

@@ -1,0 +1,228 @@
+"""Attribution-waterfall tests: exact chip-time conservation (the PR's
+acceptance bar), layer routing, and the Layer enum plumbing.
+
+The conservation contract has two teeth:
+
+  * the waterfall's float mirror must equal ``ledger.totals()`` with
+    plain ``==`` — bit-for-bit, no approx — on every scenario preset,
+    every golden trace, and arbitrary hypothesis-generated streams;
+  * the per-(layer, phase) cells must partition allocated chip-time in
+    exact rational arithmetic — a misrouted or dropped event cannot hide
+    in float slack.
+"""
+import random
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:     # property tests skip, the rest still run
+    from tests._hypothesis_fallback import given, settings, st
+
+from repro.core.attribution import AttributionWaterfall, waterfall_from_trace
+from repro.core.goodput import (DEFAULT_LAYER, Interval, Layer, Phase,
+                                layer_of, loss_bucket)
+from repro.core.ledger import GoodputLedger
+from repro.fleet.scenarios import SCENARIOS, golden_sim
+from repro.fleet.trace import GOLDEN_DIR, Trace
+
+PRESETS = sorted(SCENARIOS)
+
+
+# ---------------------------------------------------------------------------
+# Layer enum + bucket mapping
+# ---------------------------------------------------------------------------
+
+def test_every_phase_has_a_default_layer_and_bucket():
+    for phase in Phase:
+        layer = DEFAULT_LAYER[phase]
+        bucket = loss_bucket(phase, layer)
+        if phase is Phase.STEP:
+            assert bucket is None          # productive, not a loss
+        else:
+            assert isinstance(bucket, str) and bucket
+
+
+def test_loss_bucket_distinguishes_lost_causes():
+    assert loss_bucket(Phase.LOST, Layer.HARDWARE) == "failure_rollback"
+    assert loss_bucket(Phase.LOST, Layer.SCHEDULING) == "preemption_rollback"
+    assert loss_bucket(Phase.INIT, Layer.COMPILER) == "compile"
+    assert loss_bucket(Phase.INIT, Layer.SCHEDULING) == "migration_restart"
+
+
+def test_unmapped_combination_falls_back_to_default_bucket():
+    # DATA_STALL has no hardware-layer bucket: falls back to input_stall
+    assert loss_bucket(Phase.DATA_STALL, Layer.HARDWARE) == "input_stall"
+
+
+def test_layer_of_reads_tag_and_tolerates_legacy_values():
+    assert layer_of({"layer": "compiler"}, Phase.INIT) is Layer.COMPILER
+    # pre-refactor emitter tags ("fleet") fall back to the phase default
+    assert layer_of({"layer": "fleet"}, Phase.LOST) is Layer.HARDWARE
+    assert layer_of({}, Phase.IDLE) is Layer.SCHEDULING
+
+
+# ---------------------------------------------------------------------------
+# conservation on simulated fleets (every preset) and golden traces
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("preset", PRESETS)
+def test_waterfall_conserves_on_every_preset(preset):
+    sim = golden_sim(preset)
+    wf = AttributionWaterfall().attach(sim.ledger)
+    sim.run()
+    wf.assert_conserves(sim.ledger)        # bit-for-bit + exact partition
+    totals = sim.ledger.totals()
+    assert wf.n_events == totals["n_events"]
+    checks = wf.conservation()
+    assert checks["conserved"]
+    # the report's loss rows + productive ideal account for capacity
+    rep = wf.report()
+    total = (rep["ideal_chip_time"]
+             + sum(r["chip_time"] for r in rep["losses"]))
+    assert total == pytest.approx(rep["capacity_chip_time"], rel=1e-12)
+
+
+@pytest.mark.parametrize("preset", PRESETS)
+def test_waterfall_from_golden_trace_conserves(preset):
+    trace = Trace.load(GOLDEN_DIR / f"{preset}.jsonl")
+    wf, ledger = waterfall_from_trace(trace)
+    assert ledger.totals() == trace.totals     # replay is exact
+    wf.assert_conserves(ledger)
+    assert wf.totals_match(ledger)
+
+
+def test_attribution_moves_with_the_scenario():
+    """The waterfall localizes losses to the right layer: a maintenance
+    wave grows the scheduling share, a failure storm the hardware share
+    (vs the steady baseline)."""
+    def shares(preset):
+        sim = golden_sim(preset)
+        wf = AttributionWaterfall().attach(sim.ledger)
+        sim.run()
+        rep = wf.report()
+        cap = rep["capacity_chip_time"]
+        return {k: v / cap for k, v in rep["lost_by_layer"].items()}
+
+    steady = shares("steady")
+    assert shares("maintenance")["scheduling"] > steady["scheduling"]
+    assert (shares("failure_storm").get("hardware", 0.0)
+            > steady.get("hardware", 0.0))
+
+
+def test_preemption_rollback_lands_on_scheduling_layer():
+    """LOST intervals carry the evicting cause: preemption rollbacks are
+    scheduling-layer, not hardware-layer."""
+    from repro.fleet.scenarios import build_sim
+
+    sim = build_sim(SCENARIOS["steady"].load(1.6), n_jobs=40, seed=7,
+                    n_pods=2, pod_size=64, horizon=24 * 3600.0,
+                    retain_intervals=True)
+    sim.run()
+    preempted = sum(j.preemptions for j in sim.jobs.values())
+    assert preempted > 0, "need preemptions to exercise the routing"
+    lost_layers = {iv.segment["layer"] for iv in sim.intervals
+                   if iv.phase is Phase.LOST}
+    assert Layer.SCHEDULING.value in lost_layers
+
+
+# ---------------------------------------------------------------------------
+# conservation on arbitrary streams (hypothesis + example mirrors)
+# ---------------------------------------------------------------------------
+
+def _stream(seed, n):
+    rng = random.Random(seed)
+    phases = list(Phase)
+    layers = [l.value for l in Layer] + [None, "fleet"]
+    out = []
+    for _ in range(n):
+        t0 = rng.uniform(0, 40_000.0)
+        seg = {"size_class": rng.choice(("small", "xl"))}
+        layer = rng.choice(layers)
+        if layer is not None:
+            seg["layer"] = layer
+        out.append(Interval(
+            job_id=f"job{rng.randrange(6)}", phase=rng.choice(phases),
+            t0=t0, t1=t0 + rng.uniform(0, 9_000.0),
+            chips=rng.choice([1, 4, 64]), segment=seg))
+    return out
+
+
+def _assert_conserves_stream(seed, n):
+    led = GoodputLedger(capacity_chip_time=5e9, retain_intervals=False)
+    wf = AttributionWaterfall().attach(led)
+    pg_rng = random.Random(seed + 1)
+    for iv in _stream(seed, n):
+        led.record(iv, pg=pg_rng.uniform(0.1, 1.0))
+    wf.assert_conserves(led)
+    assert wf.totals_match(led)
+    checks = wf.conservation()
+    assert checks["cells_partition_allocated"]
+    assert checks["capacity_covers_allocated"]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000),
+       st.integers(min_value=1, max_value=300))
+def test_waterfall_conserves_arbitrary_streams(seed, n):
+    _assert_conserves_stream(seed, n)
+
+
+@pytest.mark.parametrize("seed", [0, 3, 11])
+def test_waterfall_conserves_arbitrary_streams_examples(seed):
+    _assert_conserves_stream(seed, 250)
+
+
+def test_misset_capacity_is_not_conserved():
+    """A capacity smaller than allocation must fail conservation (the
+    unallocated residual would go negative); a capacity-less ledger
+    (RG-only use) skips the capacity checks and emits no unallocated
+    row rather than a negative one."""
+    led = GoodputLedger(capacity_chip_time=10.0, retain_intervals=False)
+    wf = AttributionWaterfall().attach(led)
+    led.emit("a", Phase.STEP, 0.0, 100.0, chips=1)     # allocated=100 > 10
+    assert not wf.conservation()["capacity_covers_allocated"]
+    assert not wf.conservation()["conserved"]
+    with pytest.raises(AssertionError, match="conservation"):
+        wf.assert_conserves(led)
+
+    bare = GoodputLedger(retain_intervals=False)       # capacity never set
+    wf2 = AttributionWaterfall().attach(bare)
+    bare.emit("a", Phase.STEP, 0.0, 100.0, chips=1)
+    wf2.assert_conserves(bare)
+    buckets = [r["bucket"] for r in wf2.report()["losses"]]
+    assert "unallocated_capacity" not in buckets
+
+
+def test_attach_refuses_a_used_ledger():
+    led = GoodputLedger()
+    led.emit("a", Phase.STEP, 0.0, 10.0, chips=1)
+    with pytest.raises(ValueError, match="before any event"):
+        AttributionWaterfall().attach(led)
+
+
+def test_waterfall_state_is_bounded():
+    led = GoodputLedger(retain_intervals=False)
+    wf = AttributionWaterfall().attach(led)
+    for iv in _stream(0, 2000):
+        led.record(iv)
+    # cells are (layer, phase) pairs — bounded by the enums, not events
+    assert sum(wf.state_size().values()) <= len(Layer) * len(Phase)
+
+
+# ---------------------------------------------------------------------------
+# keep_intervals opt-out (satellite)
+# ---------------------------------------------------------------------------
+
+def test_fleet_sim_keep_intervals_opt_out():
+    from repro.fleet.sim import FleetSim, SimConfig
+
+    cfg = SimConfig(n_pods=2, pod_size=32, horizon=3600.0)
+    assert cfg.retain_intervals          # config default unchanged
+    sim = FleetSim(cfg, keep_intervals=False)
+    wf = AttributionWaterfall().attach(sim.ledger)
+    sim.run()
+    assert sim.ledger.intervals is None
+    with pytest.raises(AttributeError):
+        sim.intervals
+    wf.assert_conserves(sim.ledger)

@@ -93,6 +93,12 @@ SCHEMAS = {
         "events_streamed": positive,
         "retained_state_entries": positive,
         "state_size": {"retained_intervals": lambda x: x == 0},
+        # attribution rides the same stream without an interval list
+        "attribution": {
+            "state_entries": lambda x: 0 < x < 100,
+            "conserved": lambda x: x is True,
+            "lost_by_layer": each_value(non_negative),
+        },
     },
     "table2_mpg_composition.json": {
         "table": each_value(GOODPUT_ROW),
@@ -114,6 +120,28 @@ SCHEMAS = {
             "all_bounded": lambda x: x is True,
             "protect_xl_never_evicts_xl": lambda x: x is True,
             "static_never_preempts": lambda x: x is True,
+        },
+    },
+    "advisor_rank.json": {
+        "scale": str,
+        "knob_catalog": lambda x: isinstance(x, list) and len(x) >= 5,
+        "scenarios": each_value({
+            "baseline": GOODPUT_ROW,
+            "conserved": lambda x: x is True,
+            "lost_by_layer": each_value(non_negative),
+            "ranking": lambda x: isinstance(x, list) and len(x) >= 5
+            and all({"knob", "targets", "MPG", "recovered_mpg"} <= set(r)
+                    for r in x),
+        }),
+        "checks": {
+            # the PR acceptance matrix: >= 5 knobs on all 7 presets,
+            # exact conservation everywhere, Fig 14 order on steady
+            "n_scenarios": lambda x: x >= 7,
+            "n_knobs": lambda x: x >= 5,
+            "all_conserved": lambda x: x is True,
+            "fig14_async_leads": lambda x: x is True,
+            "policy_swap_noop_on_paper_baseline": lambda x: x is True,
+            "gen_upgrade_pays_on_hetero": lambda x: x is True,
         },
     },
 }

@@ -5,7 +5,7 @@ import time
 import numpy as np
 import pytest
 
-from repro.core.goodput import Phase
+from repro.core.goodput import Layer, Phase
 from repro.core.ledger import GoodputLedger
 from repro.launch.serve import Request, Server, TickClock, pad_group
 
@@ -80,8 +80,12 @@ def test_serve_emits_all_accounting_phases(smoke_server):
     # serve segment tagging feeds the fleet-wide phase_kind split (Fig. 15)
     by = ledger.segment_report("phase_kind", {"serve": 1.0})
     assert "serve" in by
-    # cross-layer provenance: serve events carry layer=serve (trace source)
-    assert "serve" in ledger.segment_report("layer", {"serve": 1.0})
+    # cross-layer provenance: serve events carry emitter=serve (trace
+    # source) plus a canonical stack-layer tag for attribution
+    assert "serve" in ledger.segment_report("emitter", {"serve": 1.0})
+    layers = set(ledger.segment_report("layer", {}))
+    assert layers <= {l.value for l in Layer}
+    assert {"model", "scheduling"} <= layers
 
 
 def test_injected_tick_clock_makes_serve_accounting_deterministic():
