@@ -1,0 +1,226 @@
+"""Fleet-scale perf benchmark: the repo's speed bar (BENCH_fleet_scale.json).
+
+Three sections, all written to ``BENCH_fleet_scale.json`` at the repo
+root so every later PR is held to the same trajectory:
+
+  * ``tiny`` — a seconds-long smoke config run under BOTH engines; CI
+    runs only this (``--tiny``) and gates on the *speedup ratio*
+    (vectorized vs reference on the same machine), which is portable
+    across runner hardware where raw events/sec is not;
+  * ``ledger_scale_config`` — the pre-existing ``benchmarks/ledger_scale``
+    workload (3 clusters, 30 days, shared ledger + attribution
+    waterfall) timed head-to-head under both engines;
+  * ``year_scale`` — 1M jobs over a simulated year on 3 clusters under
+    the vectorized engine (events/sec, wall-clock, peak RSS).
+
+Every section also records a config fingerprint (sha256 over the exact
+knobs) so a number is never compared against a silently different
+workload.  ``--check`` re-runs the tiny section and fails if its speedup
+ratio fell below ``REGRESSION_FLOOR`` x the committed baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import pathlib
+import resource
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.attribution import AttributionWaterfall
+from repro.core.ledger import GoodputLedger
+from repro.fleet.sim import FleetSim, SimConfig
+from repro.fleet.workload import generate_jobs
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+BENCH_PATH = REPO_ROOT / "BENCH_fleet_scale.json"
+DAY = 24 * 3600.0
+YEAR = 365 * DAY
+
+# CI regression gate: fail when the fresh tiny-section speedup drops
+# below this fraction of the committed baseline's (>30% regression)
+REGRESSION_FLOOR = 0.7
+
+# the year-scale size mix excludes XL (multi-pod) jobs: their drain/
+# defragmentation migration churn is a *scheduling* stress (covered by
+# ledger_scale_config), not a throughput benchmark — with XL in the mix
+# the event count stops being O(jobs) and the run measures churn instead
+YEAR_MIX = {"small": 0.5, "medium": 0.35, "large": 0.15, "xl": 0.0}
+
+TINY = {"jobs_per_cluster": 150, "horizon_days": 7.0, "target_load": 0.6,
+        "clusters": [[4, 256], [2, 256]], "seed": 42}
+LEDGER_SCALE = {"jobs_per_cluster": 700, "horizon_days": 30.0,
+                "target_load": 0.6,
+                "clusters": [[8, 256], [16, 256], [4, 256]], "seed": 42}
+YEAR_SCALE = {"jobs_per_cluster": 333_334, "horizon_days": 365.0,
+              "target_load": 0.5,
+              "clusters": [[32, 256], [32, 256], [32, 256]], "seed": 42,
+              "size_mix": YEAR_MIX}
+
+
+def _fingerprint(cfg: Dict) -> str:
+    return hashlib.sha256(
+        json.dumps(cfg, sort_keys=True).encode()).hexdigest()[:16]
+
+
+def _peak_rss_mb() -> float:
+    # ru_maxrss is KiB on Linux, bytes on macOS
+    peak = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    if sys.platform == "darwin":
+        peak /= 1024
+    return round(peak / 1024, 1)
+
+
+def _run_fleet(cfg: Dict, engine: str,
+               size_mix: Optional[Dict[str, float]] = None
+               ) -> Tuple[float, int, int]:
+    """Simulate the config's clusters into one shared ledger (with an
+    attribution waterfall riding the stream, like ledger_scale does);
+    returns (sim wall-clock seconds, events, jobs)."""
+    horizon = cfg["horizon_days"] * DAY
+    seed = cfg["seed"]
+    ledger = GoodputLedger(window=DAY, retain_intervals=False)
+    waterfall = AttributionWaterfall().attach(ledger)
+    total_jobs = 0
+    wall = 0.0
+    for ci, (n_pods, pod_size) in enumerate(cfg["clusters"]):
+        sim_cfg = SimConfig(n_pods=n_pods, pod_size=pod_size,
+                            horizon=horizon, seed=seed + ci,
+                            retain_intervals=False, ledger_window=DAY,
+                            sample_dt=6 * 3600.0, engine=engine)
+        sim = FleetSim(sim_cfg, ledger=ledger)
+        for j in generate_jobs(cfg["jobs_per_cluster"], horizon,
+                               seed=seed + ci,
+                               capacity_chips=n_pods * pod_size,
+                               target_load=cfg["target_load"],
+                               size_mix=size_mix, pg_table={}):
+            sim.submit(dataclasses.replace(j, job_id=f"c{ci}/{j.job_id}"))
+            total_jobs += 1
+        t0 = time.perf_counter()
+        sim.run()
+        wall += time.perf_counter() - t0
+    waterfall.assert_conserves(ledger)
+    return wall, ledger.n_events, total_jobs
+
+
+def _ab_section(cfg: Dict, size_mix: Optional[Dict[str, float]] = None
+                ) -> Dict:
+    """Both engines on the same config; the reference run doubles as the
+    equivalence cross-check (identical event counts by construction)."""
+    wall_v, events_v, jobs = _run_fleet(cfg, "vectorized", size_mix)
+    wall_r, events_r, _ = _run_fleet(cfg, "reference", size_mix)
+    assert events_v == events_r, (
+        f"engines disagree on event count: {events_v} != {events_r}")
+    return {
+        "config": cfg,
+        "config_fingerprint": _fingerprint(cfg),
+        "jobs": jobs,
+        "events": events_v,
+        "vectorized": {"wall_s": round(wall_v, 3),
+                       "events_per_s": round(events_v / wall_v, 1)},
+        "reference": {"wall_s": round(wall_r, 3),
+                      "events_per_s": round(events_r / wall_r, 1)},
+        "speedup": round(wall_r / wall_v, 3),
+    }
+
+
+def run_tiny() -> Dict:
+    return _ab_section(TINY)
+
+
+def run_ledger_scale_config() -> Dict:
+    return _ab_section(LEDGER_SCALE)
+
+
+def run_year_scale() -> Dict:
+    cfg = dict(YEAR_SCALE)
+    mix = cfg.pop("size_mix")
+    wall, events, jobs = _run_fleet(cfg, "vectorized", size_mix=mix)
+    return {
+        "config": YEAR_SCALE,
+        "config_fingerprint": _fingerprint(YEAR_SCALE),
+        "engine": "vectorized",
+        "jobs": jobs,
+        "events": events,
+        "wall_s": round(wall, 1),
+        "wall_minutes": round(wall / 60.0, 2),
+        "events_per_s": round(events / wall, 1),
+    }
+
+
+def _load_committed() -> Dict:
+    if BENCH_PATH.exists():
+        return json.loads(BENCH_PATH.read_text())
+    return {}
+
+
+def _write(bench: Dict) -> None:
+    bench["version"] = 1
+    bench["generated_by"] = "benchmarks/fleet_scale.py"
+    bench["peak_rss_mb"] = _peak_rss_mb()
+    BENCH_PATH.write_text(json.dumps(bench, indent=1, sort_keys=True) + "\n")
+
+
+def check(fresh_tiny: Dict, committed: Dict) -> None:
+    """CI gate: fail when the tiny-config speedup ratio regressed more
+    than (1 - REGRESSION_FLOOR) vs the committed baseline."""
+    base = committed.get("tiny")
+    if not base:
+        print("fleet_scale --check: no committed baseline; skipping gate")
+        return
+    if base.get("config_fingerprint") != fresh_tiny["config_fingerprint"]:
+        print("fleet_scale --check: tiny config changed; committed "
+              "baseline not comparable — skipping gate (commit a fresh "
+              "BENCH_fleet_scale.json)")
+        return
+    floor = base["speedup"] * REGRESSION_FLOOR
+    msg = (f"tiny speedup {fresh_tiny['speedup']:.2f}x vs committed "
+           f"{base['speedup']:.2f}x (floor {floor:.2f}x)")
+    if fresh_tiny["speedup"] < floor:
+        raise SystemExit(f"fleet_scale --check FAILED: {msg}")
+    print(f"fleet_scale --check OK: {msg}")
+
+
+def main(quick: bool = False, tiny: bool = False,
+         do_check: bool = False) -> Dict:
+    committed = _load_committed()
+    bench = dict(committed)
+    t_start = time.monotonic()
+    fresh_tiny = run_tiny()
+    bench["tiny"] = fresh_tiny
+    if do_check:
+        check(fresh_tiny, committed)
+    if not tiny:
+        bench["ledger_scale_config"] = run_ledger_scale_config()
+        if not quick:
+            bench["year_scale"] = run_year_scale()
+    _write(bench)
+    wall_us = (time.monotonic() - t_start) * 1e6
+    derived = {
+        "tiny_speedup": bench["tiny"]["speedup"],
+        "tiny_events_per_s": bench["tiny"]["vectorized"]["events_per_s"],
+    }
+    if "ledger_scale_config" in bench:
+        derived["ledger_scale_speedup"] = \
+            bench["ledger_scale_config"]["speedup"]
+    if "year_scale" in bench:
+        derived["year_scale_minutes"] = bench["year_scale"]["wall_minutes"]
+        derived["year_scale_jobs"] = bench["year_scale"]["jobs"]
+    print(f"fleet_scale,{wall_us:.1f},{json.dumps(derived, sort_keys=True)}")
+    return bench
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: only the tiny A/B section")
+    ap.add_argument("--full", action="store_true",
+                    help="include the 1M-job / 1-year run (minutes)")
+    ap.add_argument("--check", action="store_true",
+                    help="fail if tiny speedup regressed >30%% vs the "
+                         "committed BENCH_fleet_scale.json")
+    args = ap.parse_args()
+    main(quick=not args.full, tiny=args.tiny, do_check=args.check)

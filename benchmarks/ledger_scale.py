@@ -32,9 +32,12 @@ def run(n_jobs_per_cluster: int = 2000, seed: int = 42):
     cluster_shapes = [(8, 256), (16, 256), (4, 256)]
     total_jobs = 0
     for ci, (n_pods, pod_size) in enumerate(cluster_shapes):
+        # telemetry cadence is an explicit knob now (was hardcoded
+        # horizon/200): 6h samples keep the snapshot cost flat as the
+        # horizon grows; sampling never touches the ledger stream
         cfg = SimConfig(n_pods=n_pods, pod_size=pod_size, horizon=horizon,
                         seed=seed + ci, retain_intervals=False,
-                        ledger_window=DAY)
+                        ledger_window=DAY, sample_dt=6 * 3600.0)
         sim = FleetSim(cfg, ledger=ledger)
         for j in generate_jobs(n_jobs_per_cluster, horizon, seed=seed + ci,
                                capacity_chips=n_pods * pod_size,
@@ -61,7 +64,8 @@ def run(n_jobs_per_cluster: int = 2000, seed: int = 42):
     # equivalence control: smallest cluster re-run with retention; the
     # batch compute_goodput over its list must match its streaming report
     ctl_cfg = SimConfig(n_pods=4, pod_size=256, horizon=horizon,
-                        seed=seed + 2, ledger_window=DAY)
+                        seed=seed + 2, ledger_window=DAY,
+                        sample_dt=6 * 3600.0)
     ctl = FleetSim(ctl_cfg)
     for j in generate_jobs(n_jobs_per_cluster, horizon, seed=seed + 2,
                            capacity_chips=4 * 256, target_load=0.6,

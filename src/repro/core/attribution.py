@@ -25,9 +25,11 @@ Two levels of exactness:
     ``assert_conserves(ledger)`` compares its totals against
     ``ledger.totals()`` with plain ``==`` — bit-for-bit;
   * every event's chip-time is *also* accumulated per (layer, phase)
-    cell in exact rational arithmetic (``fractions.Fraction``; floats
-    convert exactly), so "Σ buckets == allocated" is checked with no
-    rounding at all — a misrouted event cannot hide in float slack.
+    cell in exact arithmetic (integers scaled by the subnormal quantum
+    ``2**-1074``, to which every finite float converts losslessly — same
+    exactness as ``fractions.Fraction``, at integer-addition cost), so
+    "Σ buckets == allocated" is checked with no rounding at all — a
+    misrouted event cannot hide in float slack.
 """
 from __future__ import annotations
 
@@ -40,6 +42,22 @@ from repro.core.goodput import (ALLOCATED_PHASES, PRODUCTIVE_PHASES,
                                 Interval, Layer, Phase, layer_of,
                                 loss_bucket)
 from repro.core.ledger import GoodputLedger, _Acc
+
+# Exact accumulation representation: every finite float is an integer
+# multiple of 2**-1074 (the subnormal quantum), so chip-times are stored
+# as plain ints scaled by 2**_SHIFT — integer addition is exact and an
+# order of magnitude cheaper than Fraction arithmetic, and converts
+# losslessly to Fraction(x, 1 << _SHIFT) at the read sites.  The ideal
+# sum holds products of two scaled values, hence scale 2**(2 * _SHIFT).
+_SHIFT = 1074
+
+
+def _exact(x: float) -> int:
+    """``x`` as an integer scaled by ``2**_SHIFT`` (exact for any finite
+    float: the denominator of ``as_integer_ratio`` is a power of two no
+    larger than ``2**_SHIFT``)."""
+    p, q = x.as_integer_ratio()
+    return p << (_SHIFT + 1 - q.bit_length())
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,15 +92,23 @@ class AttributionWaterfall:
         # float mirror of the ledger's aggregate accumulator — identical
         # operations in identical order, so totals compare with plain ==
         self._mirror = _Acc()
-        # exact per-(layer, phase) chip-time cells (capacity partition)
-        self._cells: Dict[Tuple[str, str], Fraction] = defaultdict(Fraction)
+        # exact per-(layer, phase) chip-time cells (capacity partition),
+        # as ints scaled by 2**_SHIFT — see module comment on _exact
+        self._cells: Dict[Tuple[str, str], int] = defaultdict(int)
         # exact running totals over the same addends as the cells
-        self._exact_allocated = Fraction(0)
-        self._exact_productive = Fraction(0)
-        self._exact_ideal = Fraction(0)
+        # (allocated/productive at scale 2**_SHIFT, ideal at 2**(2*_SHIFT))
+        self._exact_allocated = 0
+        self._exact_productive = 0
+        self._exact_ideal = 0
         # demand-side waiting time (QUEUED/PARTIAL) per layer — reported,
         # not part of the capacity partition
-        self._waits: Dict[Tuple[str, str], Fraction] = defaultdict(Fraction)
+        self._waits: Dict[Tuple[str, str], int] = defaultdict(int)
+        # layer_of memo for the batched path, keyed on interned-segment
+        # identity + phase (layer_of falls back to a per-phase default
+        # when the segment carries no valid layer tag)
+        self._layer_cache: Dict[Tuple[int, str], Tuple[dict, str]] = {}
+        # pg floats repeat heavily across a stream; cache their scalings
+        self._pg_exact: Dict[float, int] = {}
 
     # ---- ingestion --------------------------------------------------------
     def attach(self, ledger: GoodputLedger) -> "AttributionWaterfall":
@@ -92,7 +118,7 @@ class AttributionWaterfall:
                 "emitted — the ledger already holds events, so the mirror "
                 "accumulators could never match ledger.totals()")
         self._ledger = ledger
-        ledger.subscribe_events(self.on_event)
+        ledger.subscribe_events(self.on_event, batch_fn=self.on_batch)
         return self
 
     def on_event(self, iv: Interval, pg: float) -> None:
@@ -103,15 +129,72 @@ class AttributionWaterfall:
         self._mirror.add(iv.phase, ct, pg)
         layer = layer_of(iv.segment, iv.phase)
         cell = (layer.value, iv.phase.value)
-        exact_ct = Fraction(ct)
+        exact_ct = _exact(ct)
         if iv.phase in ALLOCATED_PHASES:
             self._cells[cell] += exact_ct
             self._exact_allocated += exact_ct
             if iv.phase in PRODUCTIVE_PHASES:
                 self._exact_productive += exact_ct
-                self._exact_ideal += exact_ct * Fraction(pg)
+                self._exact_ideal += exact_ct * _exact(pg)
         else:
             self._waits[cell] += exact_ct
+
+    def on_batch(self, batch) -> None:
+        """Columnar twin of :meth:`on_event` (the ledger's batched ingest
+        delivers an ``IntervalBatch`` here): identical accumulator updates
+        in identical order, so the float mirror and the exact cells match
+        the per-event path bit-for-bit.  The responsible layer is resolved
+        once per interned segment-dict identity, not per event."""
+        mirror = self._mirror
+        mphase = mirror.phase
+        cells = self._cells
+        waits = self._waits
+        layer_cache = self._layer_cache
+        pg_exact = self._pg_exact
+        phases = batch.phases
+        pgs = batch.pgs
+        segments = batch.segments
+        cts = batch.chip_times
+        n = 0
+        ea = ep = ei = 0     # integer sums commute exactly; fold in at end
+        for i in range(len(cts)):
+            ct = cts[i]
+            if ct <= 0.0:
+                continue
+            n += 1
+            ph = phases[i]
+            pg = pgs[i]
+            seg = segments[i]
+            # inlined _Acc.add body — identical float ops, identical order
+            pv = ph._value_
+            mphase[pv] = mphase.get(pv, 0.0) + ct
+            key = (id(seg), pv)
+            entry = layer_cache.get(key)
+            if entry is not None and entry[0] is seg:
+                lv = entry[1]
+            else:
+                lv = layer_of(seg, ph).value
+                if len(layer_cache) < 4096:
+                    layer_cache[key] = (seg, lv)
+            exact_ct = _exact(ct)
+            if ph._x_alloc:
+                mirror.allocated += ct
+                cells[(lv, pv)] += exact_ct
+                ea += exact_ct
+                if ph._x_prod:
+                    mirror.productive += ct
+                    mirror.ideal += ct * pg
+                    ep += exact_ct
+                    pgx = pg_exact.get(pg)
+                    if pgx is None:
+                        pgx = pg_exact[pg] = _exact(pg)
+                    ei += exact_ct * pgx
+            else:
+                waits[(lv, pv)] += exact_ct
+        self._exact_allocated += ea
+        self._exact_productive += ep
+        self._exact_ideal += ei
+        self.n_events += n
 
     # ---- conservation -----------------------------------------------------
     @property
@@ -136,9 +219,9 @@ class AttributionWaterfall:
           * ``mirrors_ledger`` — the float mirror equals
             ``ledger.totals()`` bit-for-bit (plain ``==`` on floats).
         """
-        cap = Fraction(self.capacity_chip_time
-                       if capacity_chip_time is None else capacity_chip_time)
-        cells_total = sum(self._cells.values(), Fraction(0))
+        cap = _exact(self.capacity_chip_time
+                     if capacity_chip_time is None else capacity_chip_time)
+        cells_total = sum(self._cells.values())
         out = {
             "cells_partition_allocated": cells_total == self._exact_allocated,
             "capacity_covers_allocated":
@@ -178,7 +261,7 @@ class AttributionWaterfall:
                        phase: Optional[Phase] = None) -> float:
         """Allocated-but-unproductive chip-time, filtered by layer and/or
         phase (waiting time excluded — see module docstring)."""
-        total = Fraction(0)
+        total = 0
         for (lyr, ph), ct in self._cells.items():
             if Phase(ph) in PRODUCTIVE_PHASES:
                 continue
@@ -187,7 +270,7 @@ class AttributionWaterfall:
             if phase is not None and ph != phase.value:
                 continue
             total += ct
-        return float(total)
+        return float(Fraction(total, 1 << _SHIFT))
 
     def report(self, capacity_chip_time: Optional[float] = None
                ) -> Dict[str, object]:
@@ -197,16 +280,20 @@ class AttributionWaterfall:
         cap = (self.capacity_chip_time if capacity_chip_time is None
                else capacity_chip_time)
         fcap = cap if cap else 1.0
+        one = 1 << _SHIFT
         rows: List[LossRow] = []
         for (lyr, ph), ct in sorted(self._cells.items()):
             phase = Phase(ph)
             if phase in PRODUCTIVE_PHASES or ct == 0:
                 continue
+            fct = float(Fraction(ct, one))
             rows.append(LossRow(layer=lyr, phase=ph,
                                 bucket=loss_bucket(phase, Layer(lyr)),
-                                chip_time=float(ct),
-                                frac_of_capacity=float(ct) / fcap))
-        gap = float(self._exact_productive - self._exact_ideal)
+                                chip_time=fct,
+                                frac_of_capacity=fct / fcap))
+        # productive is at scale 2**_SHIFT, ideal at 2**(2*_SHIFT)
+        gap = float(Fraction((self._exact_productive << _SHIFT)
+                             - self._exact_ideal, one * one))
         if gap:
             rows.append(LossRow(layer=Layer.MODEL.value, phase="step",
                                 bucket="program_gap", chip_time=gap,
@@ -214,7 +301,8 @@ class AttributionWaterfall:
         # the unallocated row only exists relative to a set capacity; on
         # a capacity-less ledger (RG-only use) it would be a meaningless
         # negative residual
-        unalloc = float(Fraction(cap) - self._exact_allocated) if cap else 0.0
+        unalloc = (float(Fraction(_exact(cap) - self._exact_allocated, one))
+                   if cap else 0.0)
         if unalloc:
             rows.append(LossRow(layer=Layer.SCHEDULING.value, phase=None,
                                 bucket="unallocated_capacity",
@@ -232,7 +320,7 @@ class AttributionWaterfall:
             "losses": [r.as_dict() for r in rows],
             "lost_by_layer": dict(sorted(by_layer.items(),
                                          key=lambda kv: -kv[1])),
-            "waits": {f"{lyr}/{ph}": float(ct)
+            "waits": {f"{lyr}/{ph}": float(Fraction(ct, one))
                       for (lyr, ph), ct in sorted(self._waits.items())
                       if ct},
             "conservation": self.conservation(cap),

@@ -30,10 +30,62 @@ from __future__ import annotations
 import dataclasses
 import math
 from collections import defaultdict
-from typing import Callable, Dict, Iterable, List, Optional, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.core.goodput import (ALLOCATED_PHASES, PRODUCTIVE_PHASES,
                                 GoodputReport, Interval, Phase)
+
+try:                               # numpy vectorizes the per-event derived
+    import numpy as _np            # quantities in add_intervals; the pure-
+except ModuleNotFoundError:        # python fallback is value-identical
+    _np = None
+
+# resolved segment-accumulator lists are cached per interned segment-dict
+# identity; past this many distinct dicts the caller is clearly not
+# interning and caching would grow per event, so we stop inserting
+_SEG_CACHE_CAP = 4096
+
+# hot-loop classification pinned onto the Phase members themselves: the
+# batched ingest path reads plain attributes instead of paying an
+# enum-hash set lookup per accumulator per event
+for _p in Phase:
+    _p._x_alloc = _p in ALLOCATED_PHASES
+    _p._x_prod = _p in PRODUCTIVE_PHASES
+del _p
+
+
+class IntervalBatch:
+    """A columnar slice of the event stream: parallel sequences, one row
+    per recorded event (zero-chip-time rows are filtered out before batch
+    subscribers see them, exactly like :meth:`GoodputLedger.record`).
+
+    ``chip_times[i]`` is precomputed ``(t1[i] - t0[i]) * chips[i]`` — the
+    same IEEE operations :attr:`Interval.chip_time` performs, so consumers
+    mirroring the ledger stay bit-for-bit."""
+
+    __slots__ = ("job_ids", "phases", "t0", "t1", "chips", "pgs",
+                 "segments", "chip_times")
+
+    def __init__(self, job_ids, phases, t0, t1, chips, pgs, segments,
+                 chip_times):
+        self.job_ids = job_ids
+        self.phases = phases
+        self.t0 = t0
+        self.t1 = t1
+        self.chips = chips
+        self.pgs = pgs
+        self.segments = segments
+        self.chip_times = chip_times
+
+    def __len__(self) -> int:
+        return len(self.t0)
+
+    def intervals(self) -> List[Interval]:
+        """Materialize Interval objects (for per-event consumers)."""
+        return [Interval(job_id=j, phase=p, t0=a, t1=b, chips=c, segment=s)
+                for j, p, a, b, c, s in zip(self.job_ids, self.phases,
+                                            self.t0, self.t1, self.chips,
+                                            self.segments)]
 
 
 @dataclasses.dataclass
@@ -101,19 +153,34 @@ class GoodputLedger:
         # pg_by_job table supplied *after* the stream (legacy API shape)
         self._job_productive: Dict[str, float] = defaultdict(float)
         self._subscribers: List[Callable[[Interval], None]] = []
-        self._event_subscribers: List[Callable[[Interval, float], None]] = []
+        # (per-event fn, optional batch fn) pairs — see subscribe_events
+        self._event_subscribers: List[Tuple[Callable[[Interval, float], None],
+                                            Optional[Callable]]] = []
+        # id(segment dict) -> (dict, resolved accumulator list); the
+        # batched ingest path resolves each *interned* segment dict's
+        # (key, value) accumulators once instead of per event
+        self._seg_acc_cache: Dict[int, Tuple[Dict[str, str], List[_Acc]]] = {}
 
     # ---- event ingestion --------------------------------------------------
     def subscribe(self, fn: Callable[[Interval], None]) -> None:
         """Call ``fn(interval)`` on every recorded event."""
         self._subscribers.append(fn)
 
-    def subscribe_events(self, fn: Callable[[Interval, float], None]) -> None:
+    def subscribe_events(self, fn: Callable[[Interval, float], None],
+                         batch_fn: Optional[Callable[["IntervalBatch"],
+                                                     None]] = None) -> None:
         """Call ``fn(interval, pg)`` on every recorded event — the pg-aware
         hook trace recorders need (``repro.fleet.trace``): replaying the
         observed ``(interval, pg)`` stream reproduces this ledger's totals
-        bit-for-bit."""
-        self._event_subscribers.append(fn)
+        bit-for-bit.
+
+        ``batch_fn``, when given, makes the subscriber *batch-aware*: the
+        columnar ingest path (:meth:`add_intervals`) delivers one
+        :class:`IntervalBatch` per flush instead of a per-event callback —
+        same events, same order, no per-interval Python dispatch.  A
+        subscriber without ``batch_fn`` still sees every event (the batch
+        path materializes Interval objects for it)."""
+        self._event_subscribers.append((fn, batch_fn))
 
     def add_capacity(self, chip_time: float) -> None:
         """Add an emitter's capacity to the SG denominator (multi-cluster)."""
@@ -131,12 +198,12 @@ class GoodputLedger:
             self._job_productive[iv.job_id] += ct
         for key, val in iv.segment.items():
             self._segments[key][val].add(iv.phase, ct, pg)
-        self._add_windowed(iv, pg)
+        self._add_windowed(iv.phase, iv.t0, iv.t1, iv.chips, pg)
         if self.retain_intervals:
             self.intervals.append(iv)
         for fn in self._subscribers:
             fn(iv)
-        for fn in self._event_subscribers:
+        for fn, _ in self._event_subscribers:
             fn(iv, pg)
 
     def emit(self, job_id: str, phase: Phase, t0: float, t1: float,
@@ -155,19 +222,173 @@ class GoodputLedger:
         for iv in intervals:
             self.record(iv, pg=table.get(iv.job_id, 1.0))
 
-    def _add_windowed(self, iv: Interval, pg: float) -> None:
+    def _add_windowed(self, phase: Phase, t0: float, t1: float, chips: int,
+                      pg: float) -> None:
         w = self.window
-        if w <= 0 or not math.isfinite(iv.t0) or not math.isfinite(iv.t1):
+        if w <= 0 or not math.isfinite(t0) or not math.isfinite(t1):
             return
-        i0 = int(iv.t0 // w)
-        i1 = int(iv.t1 // w) if iv.t1 % w else int(iv.t1 // w) - 1
+        i0 = int(t0 // w)
+        i1 = int(t1 // w) if t1 % w else int(t1 // w) - 1
         if i1 < i0:
             i1 = i0
         for widx in range(i0, i1 + 1):
-            lo = max(iv.t0, widx * w)
-            hi = min(iv.t1, (widx + 1) * w)
+            lo = max(t0, widx * w)
+            hi = min(t1, (widx + 1) * w)
             if hi > lo:
-                self._windows[widx].add(iv.phase, (hi - lo) * iv.chips, pg)
+                self._windows[widx].add(phase, (hi - lo) * chips, pg)
+
+    def add_intervals(self, job_ids: Sequence[str], phases: Sequence[Phase],
+                      t0: Sequence[float], t1: Sequence[float],
+                      chips: Sequence[int], pgs: Sequence[float],
+                      segments: Sequence[Dict[str, str]]) -> int:
+        """Columnar batch ingest: one call for many events.
+
+        Semantically identical to calling :meth:`record` once per row in
+        order — the accumulators receive the *same addends in the same
+        order*, so ``totals()`` after a batched stream is bit-for-bit
+        equal to the per-event stream.  The speed comes from what batching
+        makes possible without touching that order:
+
+          * derived chip-times are computed elementwise over the whole
+            batch (numpy when available; IEEE ops are identical per
+            element either way);
+          * (key, value) sub-ledger accumulators are resolved once per
+            *interned* segment dict instead of per event;
+          * batch-aware subscribers (``subscribe_events(fn, batch_fn)``)
+            get one :class:`IntervalBatch` per flush; ``Interval`` objects
+            are only materialized when a legacy per-event consumer (or
+            ``retain_intervals``) needs them.
+
+        Returns the number of events actually recorded (zero-chip-time
+        rows are skipped, exactly like ``record``)."""
+        n = len(t0)
+        if n == 0:
+            return 0
+        if _np is not None and n >= 16:
+            cts = ((_np.asarray(t1, dtype=_np.float64)
+                    - _np.asarray(t0, dtype=_np.float64))
+                   * _np.asarray(chips, dtype=_np.float64)).tolist()
+        else:
+            cts = [(b - a) * c for a, b, c in zip(t0, t1, chips)]
+
+        totals = self._totals
+        tphase = totals.phase
+        segs_root = self._segments
+        seg_cache = self._seg_acc_cache
+        jobprod = self._job_productive
+        retained = self.intervals
+        per_event = (bool(self._subscribers)
+                     or any(bfn is None for _, bfn in self._event_subscribers))
+        need_ivs = retained is not None or per_event
+
+        windows = self._windows
+        w = self.window
+        w_ok = w > 0
+        isfinite = math.isfinite
+        made: List[Optional[Interval]] = [] if need_ivs else None
+        kept = 0
+        skipped = False
+        for i in range(n):
+            ct = cts[i]
+            if ct <= 0.0:
+                skipped = True
+                if need_ivs:
+                    made.append(None)
+                continue
+            kept += 1
+            ph = phases[i]
+            pg = pgs[i]
+            seg = segments[i]
+            # ph._value_ / ph._x_alloc / ph._x_prod are plain attribute
+            # reads standing in for ph.value (a DynamicClassAttribute
+            # descriptor) and the ALLOCATED/PRODUCTIVE set lookups; the
+            # inlined _Acc.add bodies below perform the identical float
+            # operations in the identical order as acc.add(ph, ct, pg)
+            pv = ph._value_
+            is_alloc = ph._x_alloc
+            is_prod = ph._x_prod
+            tphase[pv] = tphase.get(pv, 0.0) + ct
+            if is_alloc:
+                totals.allocated += ct
+            if is_prod:
+                totals.productive += ct
+                totals.ideal += ct * pg
+                jobprod[job_ids[i]] += ct
+            entry = seg_cache.get(id(seg))
+            if entry is not None and entry[0] is seg:
+                accs = entry[1]
+            else:
+                accs = [segs_root[k][v] for k, v in seg.items()]
+                if len(seg_cache) < _SEG_CACHE_CAP:
+                    seg_cache[id(seg)] = (seg, accs)
+            for acc in accs:
+                aph = acc.phase
+                aph[pv] = aph.get(pv, 0.0) + ct
+                if is_alloc:
+                    acc.allocated += ct
+                if is_prod:
+                    acc.productive += ct
+                    acc.ideal += ct * pg
+            a = t0[i]
+            b = t1[i]
+            if w_ok and isfinite(a) and isfinite(b):
+                i0 = int(a // w)
+                i1 = int(b // w) if b % w else int(b // w) - 1
+                if i1 <= i0:
+                    # single-window fast path: same max/min clamps as
+                    # _add_windowed's loop body for widx == i0
+                    lo = max(a, i0 * w)
+                    hi = min(b, (i0 + 1) * w)
+                    if hi > lo:
+                        wct = (hi - lo) * chips[i]
+                        wacc = windows[i0]
+                        wph = wacc.phase
+                        wph[pv] = wph.get(pv, 0.0) + wct
+                        if is_alloc:
+                            wacc.allocated += wct
+                        if is_prod:
+                            wacc.productive += wct
+                            wacc.ideal += wct * pg
+                else:
+                    self._add_windowed(ph, a, b, chips[i], pg)
+            if need_ivs:
+                made.append(Interval(job_id=job_ids[i], phase=ph, t0=t0[i],
+                                     t1=t1[i], chips=chips[i], segment=seg))
+        self.n_events += kept
+        if kept == 0:
+            return 0
+
+        if need_ivs:
+            kept_rows = [(iv, pgs[i]) for i, iv in enumerate(made)
+                         if iv is not None]
+            if retained is not None:
+                retained.extend(iv for iv, _ in kept_rows)
+            for fn in self._subscribers:
+                for iv, _ in kept_rows:
+                    fn(iv)
+        batch = None
+        for fn, bfn in self._event_subscribers:
+            if bfn is not None:
+                if batch is None:
+                    batch = self._make_batch(job_ids, phases, t0, t1, chips,
+                                             pgs, segments, cts, skipped)
+                bfn(batch)
+            else:
+                for iv, pg in kept_rows:
+                    fn(iv, pg)
+        return kept
+
+    def _make_batch(self, job_ids, phases, t0, t1, chips, pgs, segments,
+                    cts, skipped) -> "IntervalBatch":
+        if not skipped:
+            return IntervalBatch(list(job_ids), list(phases), list(t0),
+                                 list(t1), list(chips), list(pgs),
+                                 list(segments), cts)
+        keep = [i for i, ct in enumerate(cts) if ct > 0.0]
+        pick = lambda seq: [seq[i] for i in keep]      # noqa: E731
+        return IntervalBatch(pick(job_ids), pick(phases), pick(t0), pick(t1),
+                             pick(chips), pick(pgs), pick(segments),
+                             pick(cts))
 
     # ---- reporting --------------------------------------------------------
     def report(self, capacity_chip_time: Optional[float] = None,

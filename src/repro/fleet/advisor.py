@@ -22,6 +22,10 @@ Because the workload generation is hermetic (``scenarios.build_sim``),
 every counterfactual run sees the byte-identical job population with only
 the knob applied — the MAD-Max/TpuGraphs-style controlled replay that
 makes "recovered MPG" a defensible ranking rather than seed noise.
+Sweeps inherit ``build_sim``'s default vectorized event core, and the
+byte-identity equivalence gate (``tests/test_golden_traces.py``) is what
+licenses that: a what-if delta computed on the fast engine is the same
+delta the reference engine would report, bit for bit.
 
 Demand saturation: with a *finite* fixed workload, an optimization mostly
 finishes the same work sooner and the saved chip-time shows up as

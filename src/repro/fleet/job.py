@@ -44,7 +44,12 @@ class JobSpec:
 
     @property
     def size_class(self) -> str:
-        return size_class(self.chips)
+        # memoized per instance: specs only change via dataclasses.replace
+        # (a fresh instance), and this sits on the scheduler's hot path
+        sc = self.__dict__.get("_size_class")
+        if sc is None:
+            sc = self.__dict__["_size_class"] = size_class(self.chips)
+        return sc
 
     def effective_init(self) -> float:
         init = self.init_time

@@ -53,6 +53,9 @@ class BestFitPlacement(PlacementPolicy):
     name = "best_fit"
 
     def pod_key(self, cluster):
+        occ = getattr(cluster, "pod_occupancy", None)
+        if occ is not None:   # indexed cluster: O(1) occupancy counts
+            return lambda p: (p.largest_slice(), -occ(p.pod_id))
         return lambda p: (p.largest_slice(), -len(cluster.pod_jobs(p.pod_id)))
 
 
@@ -223,8 +226,10 @@ class DefragPolicy:
         workload can emit cluster-sized requests).
         """
         pod_size = sim.cfg.pod_size
-        reserved = {a.pod for tag, a in sim.cluster.allocations.items()
-                    if tag not in sim.jobs and a.pod >= 0}
+        reserved = getattr(sim.cluster, "reserved_pods", None)
+        if reserved is None:
+            reserved = {a.pod for tag, a in sim.cluster.allocations.items()
+                        if tag not in sim.jobs and a.pod >= 0}
         serviceable = [p for p in sim.cluster.pods
                        if p.pod_id not in reserved]
         max_chips = len(serviceable) * pod_size
@@ -239,6 +244,21 @@ class DefragPolicy:
 
     @staticmethod
     def _smallest_running(sim) -> Optional[str]:
+        idx = sim.__dict__.get("_small_running")
+        if idx is not None:
+            # vectorized engine: chips -> {job_id: None} buckets over the
+            # running "small" jobs, each bucket in running-dict insertion
+            # order — the first job of the lowest non-empty bucket is the
+            # same first-minimal job the full scan below would pick
+            best = None
+            best_chips = 0
+            for c, bucket in idx.items():
+                if bucket and (best is None or c < best_chips):
+                    best = bucket
+                    best_chips = c
+            if best is None:
+                return None
+            return next(iter(best))
         victims = [j for j in sim.running
                    if sim.jobs[j].spec.size_class == "small"]
         if not victims:

@@ -211,7 +211,9 @@ def build_sim(scenario: Scenario, *, n_jobs: int = 200, seed: int = 0,
               ledger: Optional[GoodputLedger] = None,
               pg_table: Optional[Dict[str, float]] = None,
               size_mix: Optional[Dict[str, float]] = None,
-              job_mutator: Optional[Callable] = None) -> FleetSim:
+              job_mutator: Optional[Callable] = None,
+              engine: str = "vectorized",
+              sample_dt: Optional[float] = None) -> FleetSim:
     """A ready-to-run ``FleetSim`` for one scenario.
 
     Hermetic by construction: the pg table defaults to ``{}`` (per-arch PG
@@ -227,6 +229,7 @@ def build_sim(scenario: Scenario, *, n_jobs: int = 200, seed: int = 0,
     cfg = SimConfig(n_pods=n_pods, pod_size=pod_size, horizon=horizon,
                     seed=seed, placement=placement, preemption=preemption,
                     defrag=defrag, retain_intervals=retain_intervals,
+                    engine=engine, sample_dt=sample_dt,
                     scenario=scenario)
     sim = FleetSim(cfg, ledger=ledger)
     profile = (scenario.arrival.intensity
@@ -265,13 +268,16 @@ GOLDEN_KNOBS = dict(n_jobs=24, seed=GOLDEN_SEED, n_pods=2, pod_size=64,
 GOLDEN_SIZE_MIX = {"small": 0.60, "medium": 0.40}
 
 
-def golden_sim(preset: str) -> FleetSim:
-    """The exact sim configuration behind ``tests/golden/<preset>.jsonl``."""
+def golden_sim(preset: str, engine: str = "vectorized") -> FleetSim:
+    """The exact sim configuration behind ``tests/golden/<preset>.jsonl``.
+
+    ``engine`` selects the event core; both engines must produce the same
+    bytes (the equivalence gate in ``tests/test_golden_traces.py``)."""
     if preset not in SCENARIOS:
         raise ValueError(f"unknown scenario preset {preset!r}; "
                          f"choose from {sorted(SCENARIOS)}")
     return build_sim(SCENARIOS[preset], size_mix=GOLDEN_SIZE_MIX,
-                     **GOLDEN_KNOBS)
+                     engine=engine, **GOLDEN_KNOBS)
 
 
 def preset_names() -> List[str]:

@@ -66,12 +66,39 @@ class SimConfig:
     # accounting
     retain_intervals: bool = True            # keep raw Interval list
     ledger_window: float = 3600.0            # MPG time-series bucket (s)
+    # telemetry sampling cadence (seconds); None keeps the historical
+    # horizon/200 coupling — set explicitly for year-horizon runs so the
+    # windowed-series resolution does not silently change with horizon
+    sample_dt: Optional[float] = None
+    # event-core engine: "vectorized" (default; same decisions + rng
+    # streams, batched accounting and memoized scheduling) or "reference"
+    # (the legacy per-event engine, the equivalence-gate baseline)
+    engine: str = "vectorized"
     # fleet conditions (diurnal load, maintenance drains, failure bursts,
     # heterogeneous pod generations) — see repro.fleet.scenarios
     scenario: Optional["Scenario"] = None
 
+    def __post_init__(self):
+        if self.engine not in ("reference", "vectorized"):
+            raise ValueError(
+                f"SimConfig.engine must be 'reference' or 'vectorized', "
+                f"got {self.engine!r}")
+        if self.sample_dt is not None and not self.sample_dt > 0:
+            raise ValueError(
+                f"SimConfig.sample_dt must be > 0, got {self.sample_dt!r}")
+
 
 class FleetSim:
+    def __new__(cls, cfg: SimConfig, *args, **kwargs):
+        # `FleetSim(cfg)` honours cfg.engine: the vectorized subclass is
+        # decision-identical (same policies, same rng streams) but runs
+        # the hot path through caches and batched ledger ingest.  Explicit
+        # subclass construction bypasses the dispatch.
+        if cls is FleetSim and cfg.engine == "vectorized":
+            from repro.fleet.vectorized import VectorizedFleetSim
+            return super().__new__(VectorizedFleetSim)
+        return super().__new__(cls)
+
     def __init__(self, cfg: SimConfig, ledger: Optional[GoodputLedger] = None,
                  keep_intervals: Optional[bool] = None):
         """``keep_intervals`` overrides ``cfg.retain_intervals`` for the
@@ -79,7 +106,7 @@ class FleetSim:
         runs that must stay O(1) memory (ignored when a shared ``ledger``
         is injected; its own retention setting wins)."""
         self.cfg = cfg
-        self.cluster = Cluster(cfg.n_pods, cfg.pod_size)
+        self.cluster = self._make_cluster(cfg)
         self.rng = random.Random(cfg.seed)
         self.now = 0.0
         self.events: List[Tuple[float, int, str, str]] = []
@@ -134,6 +161,11 @@ class FleetSim:
             window=cfg.ledger_window,
             retain_intervals=retain)
         self.ledger.add_capacity(self.capacity_chip_time)
+
+    def _make_cluster(self, cfg: SimConfig) -> Cluster:
+        """Engine hook: the vectorized engine substitutes an indexed,
+        cache-backed cluster with identical allocation behaviour."""
+        return Cluster(cfg.n_pods, cfg.pod_size)
 
     @property
     def intervals(self) -> List[Interval]:
@@ -228,8 +260,9 @@ class FleetSim:
                 self.cluster.release(job_id)
                 if self.placement.alloc(self.cluster, job_id, v.spec.chips,
                                         exclude=drain) is not None:
-                    v.spec = dataclasses.replace(
-                        v.spec, init_time=self.cfg.defrag_migration_cost)
+                    if v.spec.init_time != self.cfg.defrag_migration_cost:
+                        v.spec = dataclasses.replace(
+                            v.spec, init_time=self.cfg.defrag_migration_cost)
                     # a migration restart's INIT is scheduling-induced
                     self._start_segment(v, init_layer=Layer.SCHEDULING)
                 else:
@@ -292,8 +325,11 @@ class FleetSim:
         # instant re-placement elsewhere (cost charged as INIT on restart)
         if self.placement.alloc(self.cluster, victim,
                                 v.spec.chips) is not None:
-            v.spec = dataclasses.replace(
-                v.spec, init_time=self.cfg.defrag_migration_cost)
+            # repeated migrations would replace with an identical spec —
+            # only rebuild when init_time actually changes
+            if v.spec.init_time != self.cfg.defrag_migration_cost:
+                v.spec = dataclasses.replace(
+                    v.spec, init_time=self.cfg.defrag_migration_cost)
             self._start_segment(v, init_layer=Layer.SCHEDULING)
             return True
         self._queued_since[victim] = self.now
@@ -488,7 +524,8 @@ class FleetSim:
     # ---- event loop -------------------------------------------------------
     def run(self):
         cfg = self.cfg
-        sample_dt = cfg.horizon / 200
+        sample_dt = (cfg.sample_dt if cfg.sample_dt is not None
+                     else cfg.horizon / 200)
         next_sample = 0.0
         while self.events:
             t, _, kind, payload = heapq.heappop(self.events)

@@ -141,13 +141,23 @@ class TraceRecorder:
         self._events: List[TraceEvent] = []
 
     def attach(self, ledger: GoodputLedger) -> "TraceRecorder":
-        ledger.subscribe_events(self._on_event)
+        ledger.subscribe_events(self._on_event, batch_fn=self._on_batch)
         return self
 
     def _on_event(self, iv: Interval, pg: float) -> None:
         self._events.append(TraceEvent(
             job_id=iv.job_id, phase=iv.phase.value, t0=iv.t0, t1=iv.t1,
             chips=iv.chips, pg=pg, segment=dict(iv.segment)))
+
+    def _on_batch(self, batch) -> None:
+        # columnar twin of _on_event: same TraceEvents in the same order
+        # (segment dicts are copied — the sim interns and reuses them)
+        self._events.extend(TraceEvent(
+            job_id=j, phase=ph.value, t0=a, t1=b, chips=c, pg=pg,
+            segment=dict(seg))
+            for j, ph, a, b, c, pg, seg in zip(
+                batch.job_ids, batch.phases, batch.t0, batch.t1,
+                batch.chips, batch.pgs, batch.segments))
 
     def finalize(self, ledger: GoodputLedger) -> Trace:
         return Trace(capacity_chip_time=ledger.capacity_chip_time,

@@ -66,9 +66,10 @@ def test_layer_of_reads_tag_and_tolerates_legacy_values():
 # conservation on simulated fleets (every preset) and golden traces
 # ---------------------------------------------------------------------------
 
+@pytest.mark.parametrize("engine", ["reference", "vectorized"])
 @pytest.mark.parametrize("preset", PRESETS)
-def test_waterfall_conserves_on_every_preset(preset):
-    sim = golden_sim(preset)
+def test_waterfall_conserves_on_every_preset(preset, engine):
+    sim = golden_sim(preset, engine=engine)
     wf = AttributionWaterfall().attach(sim.ledger)
     sim.run()
     wf.assert_conserves(sim.ledger)        # bit-for-bit + exact partition
@@ -148,29 +149,52 @@ def _stream(seed, n):
     return out
 
 
-def _assert_conserves_stream(seed, n):
+def _assert_conserves_stream(seed, n, ingest="record"):
     led = GoodputLedger(capacity_chip_time=5e9, retain_intervals=False)
     wf = AttributionWaterfall().attach(led)
     pg_rng = random.Random(seed + 1)
-    for iv in _stream(seed, n):
-        led.record(iv, pg=pg_rng.uniform(0.1, 1.0))
+    ivs = _stream(seed, n)
+    pgs = [pg_rng.uniform(0.1, 1.0) for _ in ivs]
+    if ingest == "record":
+        for iv, pg in zip(ivs, pgs):
+            led.record(iv, pg=pg)
+    else:           # the vectorized engine's columnar path
+        led.add_intervals([iv.job_id for iv in ivs],
+                          [iv.phase for iv in ivs],
+                          [iv.t0 for iv in ivs], [iv.t1 for iv in ivs],
+                          [iv.chips for iv in ivs], pgs,
+                          [iv.segment for iv in ivs])
     wf.assert_conserves(led)
     assert wf.totals_match(led)
     checks = wf.conservation()
     assert checks["cells_partition_allocated"]
     assert checks["capacity_covers_allocated"]
+    return led
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000),
+       st.integers(min_value=1, max_value=300),
+       st.sampled_from(["record", "batch"]))
+def test_waterfall_conserves_arbitrary_streams(seed, n, ingest):
+    _assert_conserves_stream(seed, n, ingest)
+
+
+@pytest.mark.parametrize("ingest", ["record", "batch"])
+@pytest.mark.parametrize("seed", [0, 3, 11])
+def test_waterfall_conserves_arbitrary_streams_examples(seed, ingest):
+    _assert_conserves_stream(seed, 250, ingest)
 
 
 @settings(max_examples=25, deadline=None)
 @given(st.integers(min_value=0, max_value=10_000),
        st.integers(min_value=1, max_value=300))
-def test_waterfall_conserves_arbitrary_streams(seed, n):
-    _assert_conserves_stream(seed, n)
-
-
-@pytest.mark.parametrize("seed", [0, 3, 11])
-def test_waterfall_conserves_arbitrary_streams_examples(seed):
-    _assert_conserves_stream(seed, 250)
+def test_batched_ingest_totals_match_per_event(seed, n):
+    # the ledger-level equivalence gate: columnar add_intervals must be
+    # bit-for-bit the same accumulation as one record() per row
+    a = _assert_conserves_stream(seed, n, "record")
+    b = _assert_conserves_stream(seed, n, "batch")
+    assert a.totals() == b.totals()
 
 
 def test_misset_capacity_is_not_conserved():

@@ -46,19 +46,24 @@ def test_replay_reproduces_recorded_totals_exactly(preset):
     verify(trace)   # the CLI-facing check agrees
 
 
+@pytest.mark.parametrize("engine", ["reference", "vectorized"])
 @pytest.mark.parametrize("preset", PRESETS)
-def test_resimulated_trace_is_byte_identical(preset):
+def test_resimulated_trace_is_byte_identical(preset, engine):
+    # the equivalence gate: BOTH event cores must reproduce the stored
+    # bytes, so golden traces pin the engines to each other as well as
+    # to history — no speed claim counts unless this passes
     stored = (GOLDEN / f"{preset}.jsonl").read_text()
-    fresh = record(golden_sim(preset)).dumps()
+    fresh = record(golden_sim(preset, engine=engine)).dumps()
     assert fresh == stored, (
-        f"simulator behaviour changed for preset {preset!r}; if "
-        "intentional, refresh with `PYTHONPATH=src python -m "
-        "repro.fleet.trace --refresh-golden`")
+        f"simulator behaviour changed for preset {preset!r} "
+        f"(engine={engine!r}); if intentional, refresh with "
+        "`PYTHONPATH=src python -m repro.fleet.trace --refresh-golden`")
 
 
-def test_same_seed_twice_is_identical():
-    a = record(golden_sim("peak_week")).dumps()
-    b = record(golden_sim("peak_week")).dumps()
+@pytest.mark.parametrize("engine", ["reference", "vectorized"])
+def test_same_seed_twice_is_identical(engine):
+    a = record(golden_sim("peak_week", engine=engine)).dumps()
+    b = record(golden_sim("peak_week", engine=engine)).dumps()
     assert a == b
 
 

@@ -1,0 +1,179 @@
+"""Vectorized event-core equivalence suite.
+
+The vectorized engine's claim is "same decisions, same rng draws, same
+ledger stream — faster".  Golden traces pin it byte-for-byte on the
+golden configs (``test_golden_traces``); this module widens the net:
+
+  * cross-engine ``ledger.totals()`` equality (plain ``==``, bit-for-bit)
+    on every scenario preset and on non-default policy combinations —
+    including the policies the fast paths special-case (best_fit) and the
+    ones they must fall through for (spread, none);
+  * the columnar ledger path: ``add_intervals`` vs per-event ``record``,
+    batch-aware vs legacy subscribers, zero-row filtering;
+  * the new ``SimConfig`` knobs (``engine``, ``sample_dt``) validate.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core.goodput import Interval, Phase
+from repro.core.ledger import GoodputLedger, IntervalBatch
+from repro.fleet.scenarios import SCENARIOS, build_sim, golden_sim
+from repro.fleet.sim import FleetSim, SimConfig
+from repro.fleet.vectorized import VectorizedFleetSim
+
+PRESETS = sorted(SCENARIOS)
+
+
+# ---------------------------------------------------------------------------
+# engine dispatch + config validation
+# ---------------------------------------------------------------------------
+
+def test_fleet_sim_dispatches_on_engine():
+    ref = FleetSim(SimConfig(n_pods=2, pod_size=32, horizon=3600.0,
+                             engine="reference"))
+    vec = FleetSim(SimConfig(n_pods=2, pod_size=32, horizon=3600.0))
+    assert type(ref) is FleetSim
+    assert type(vec) is VectorizedFleetSim
+    assert isinstance(vec, FleetSim)    # one behaviour contract
+
+
+def test_engine_validates():
+    with pytest.raises(ValueError, match="engine"):
+        SimConfig(n_pods=2, pod_size=32, horizon=3600.0, engine="turbo")
+
+
+@pytest.mark.parametrize("bad", [0.0, -1.0, float("nan")])
+def test_sample_dt_validates(bad):
+    with pytest.raises(ValueError, match="sample_dt"):
+        SimConfig(n_pods=2, pod_size=32, horizon=3600.0, sample_dt=bad)
+
+
+def test_sample_dt_sets_telemetry_cadence_without_touching_the_ledger():
+    def run(sample_dt):
+        sim = build_sim(SCENARIOS["steady"], n_jobs=30, seed=3, n_pods=2,
+                        pod_size=64, horizon=86400.0, sample_dt=sample_dt)
+        sim.run()
+        return sim
+    coarse, fine = run(6 * 3600.0), run(3600.0)
+    assert len(fine.telemetry) > len(coarse.telemetry)
+    assert fine.ledger.totals() == coarse.ledger.totals()
+
+
+# ---------------------------------------------------------------------------
+# cross-engine equivalence: every preset, non-default policy combos
+# ---------------------------------------------------------------------------
+
+def _totals(sim):
+    sim.run()
+    return sim.ledger.totals()
+
+
+@pytest.mark.parametrize("preset", PRESETS)
+def test_cross_engine_totals_bit_identical_on_presets(preset):
+    ref = _totals(golden_sim(preset, engine="reference"))
+    vec = _totals(golden_sim(preset, engine="vectorized"))
+    assert vec == ref       # plain ==: every float bit-for-bit
+
+
+# the fast paths special-case the builtin defaults (best_fit placement,
+# protect_xl preemption, drain_for_xl defrag); every other combination
+# must fall through to reference behaviour — same bits either way
+POLICY_COMBOS = [
+    ("first_fit", "protect_xl", "drain_for_xl"),
+    ("spread", "priority_only", "migrate_small"),
+    ("best_fit", "none", "none"),
+    ("best_fit", "priority_only", "drain_for_xl"),
+]
+
+
+@pytest.mark.parametrize("placement,preemption,defrag", POLICY_COMBOS)
+def test_cross_engine_totals_bit_identical_across_policies(
+        placement, preemption, defrag):
+    def totals(engine):
+        sim = build_sim(SCENARIOS["bursty"], n_jobs=60, seed=11, n_pods=3,
+                        pod_size=64, horizon=3 * 86400.0, engine=engine,
+                        placement=placement, preemption=preemption,
+                        defrag=defrag)
+        return _totals(sim)
+    assert totals("vectorized") == totals("reference")
+
+
+def test_vectorized_is_default_and_survives_config_replace():
+    cfg = SimConfig(n_pods=2, pod_size=32, horizon=3600.0)
+    assert cfg.engine == "vectorized"
+    # advisor-style sweeps rebuild configs via dataclasses.replace and
+    # must keep riding the fast engine
+    assert type(FleetSim(dataclasses.replace(cfg, seed=9))) \
+        is VectorizedFleetSim
+
+
+# ---------------------------------------------------------------------------
+# columnar ledger path
+# ---------------------------------------------------------------------------
+
+def _rows(n, t_start=0.0):
+    rows = []
+    for i in range(n):
+        t0 = t_start + 37.0 * i
+        rows.append((f"job{i % 5}", list(Phase)[i % len(Phase)],
+                     t0, t0 + 11.0 + i, 1 << (i % 5),
+                     0.25 + 0.05 * (i % 7), {"size_class": "small"}))
+    return rows
+
+
+def _columns(rows):
+    return ([r[0] for r in rows], [r[1] for r in rows],
+            [r[2] for r in rows], [r[3] for r in rows],
+            [r[4] for r in rows], [r[5] for r in rows],
+            [r[6] for r in rows])
+
+
+def test_add_intervals_matches_per_event_record():
+    rows = _rows(64)
+    a = GoodputLedger(window=3600.0)
+    for jid, ph, t0, t1, chips, pg, seg in rows:
+        a.record(Interval(jid, ph, t0, t1, chips, seg), pg=pg)
+    b = GoodputLedger(window=3600.0)
+    b.add_intervals(*_columns(rows))
+    assert b.totals() == a.totals()
+    assert b.n_events == a.n_events == 64
+
+
+def test_add_intervals_skips_zero_chip_time_rows_like_record():
+    led = GoodputLedger()
+    n = led.add_intervals(["a", "b"], [Phase.STEP, Phase.STEP],
+                          [0.0, 5.0], [0.0, 5.0], [4, 4], [0.5, 0.5],
+                          [{}, {}])
+    assert n == 0 and led.n_events == 0
+
+
+def test_batch_subscriber_sees_columnar_flushes():
+    led = GoodputLedger()
+    batches, singles = [], []
+    led.subscribe_events(lambda iv, pg: singles.append(iv),
+                         batch_fn=batches.append)
+    rows = _rows(32)
+    led.add_intervals(*_columns(rows))
+    assert singles == []        # batch-aware: no per-event dispatch
+    assert len(batches) >= 1
+    assert all(isinstance(b, IntervalBatch) for b in batches)
+    assert sum(len(b.job_ids) for b in batches) == 32
+    # chip_times are the precomputed (t1-t0)*chips, bit-for-bit
+    b0 = batches[0]
+    assert b0.chip_times[0] == (b0.t1[0] - b0.t0[0]) * b0.chips[0]
+    # a per-event record still reaches the batch-aware subscriber
+    led.record(Interval("x", Phase.STEP, 0.0, 2.0, 8, {}), pg=0.5)
+    assert sum(len(b.job_ids) for b in batches) \
+        + len(singles) == 33
+
+
+def test_legacy_subscriber_still_sees_every_event_from_batches():
+    led = GoodputLedger()
+    seen = []
+    led.subscribe_events(lambda iv, pg: seen.append((iv, pg)))
+    rows = _rows(24)
+    led.add_intervals(*_columns(rows))
+    assert len(seen) == 24      # batch path materializes Intervals for it
+    assert [iv.job_id for iv, _ in seen] == [r[0] for r in rows]
+    assert [pg for _, pg in seen] == [r[5] for r in rows]
