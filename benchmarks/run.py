@@ -17,7 +17,7 @@ from benchmarks import (advisor_rank, fig4_job_sizes, fig12_pg_compiler,
                         fig14_rg_optimizations, fig15_rg_phases,
                         fig16_sg_by_size, fleet_scale, ledger_scale,
                         overlap_speedup, roofline, scenario_sweep,
-                        table2_mpg_composition)
+                        serve_scale, table2_mpg_composition)
 from benchmarks.common import RESULTS
 
 BENCHES = [
@@ -29,6 +29,7 @@ BENCHES = [
     ("table2_mpg_composition", table2_mpg_composition.main),
     ("ledger_scale", ledger_scale.main),
     ("fleet_scale", fleet_scale.main),
+    ("serve_scale", serve_scale.main),
     ("scenario_sweep", scenario_sweep.main),
     ("advisor_rank", advisor_rank.main),
     ("overlap_speedup", overlap_speedup.main),

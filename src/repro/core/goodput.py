@@ -28,6 +28,11 @@ class Phase(enum.Enum):
     DATA_STALL = "data_stall"        # input-pipeline stall (RG loss)
     LOST = "lost"                    # rolled-back work after failure/preemption
     IDLE = "idle"                    # allocated but idle (RG loss)
+    SLO_BREACH = "slo_breach"        # serving: decode past the latency SLO
+                                     # (allocated, compute ran, but the token
+                                     # missed its deadline — an RG loss the
+                                     # batching/admission policy is
+                                     # responsible for)
 
 
 class Layer(enum.Enum):
@@ -61,6 +66,7 @@ DEFAULT_LAYER: Dict[Phase, Layer] = {
     Phase.DATA_STALL: Layer.DATA,
     Phase.LOST: Layer.HARDWARE,
     Phase.IDLE: Layer.SCHEDULING,
+    Phase.SLO_BREACH: Layer.SCHEDULING,
 }
 
 # (Phase, Layer) -> named loss bucket: the rows of the attribution
@@ -80,6 +86,7 @@ LOSS_BUCKETS: Dict[tuple, str] = {
     (Phase.LOST, Layer.SCHEDULING): "preemption_rollback",
     (Phase.IDLE, Layer.SCHEDULING): "batch_bubble",
     (Phase.IDLE, Layer.FRAMEWORK): "host_idle",
+    (Phase.SLO_BREACH, Layer.SCHEDULING): "slo_breach",
 }
 
 
@@ -122,7 +129,8 @@ class Interval:
 
 
 ALLOCATED_PHASES = {Phase.INIT, Phase.STEP, Phase.CHECKPOINT,
-                    Phase.DATA_STALL, Phase.LOST, Phase.IDLE}
+                    Phase.DATA_STALL, Phase.LOST, Phase.IDLE,
+                    Phase.SLO_BREACH}
 PRODUCTIVE_PHASES = {Phase.STEP}
 
 

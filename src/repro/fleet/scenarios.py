@@ -28,11 +28,12 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import random
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.ledger import GoodputLedger
 from repro.fleet.sim import FleetSim, SimConfig
-from repro.fleet.workload import generate_jobs
+from repro.fleet.workload import generate_jobs, make_warp
 
 
 @dataclasses.dataclass(frozen=True)
@@ -282,3 +283,31 @@ def golden_sim(preset: str, engine: str = "vectorized") -> FleetSim:
 
 def preset_names() -> List[str]:
     return sorted(SCENARIOS)
+
+
+# ---------------------------------------------------------------------------
+# serving arrivals (the serve engine reuses the fleet arrival processes)
+# ---------------------------------------------------------------------------
+
+def request_arrivals(n: int, span: float, seed: int = 0,
+                     arrival: ArrivalModulation = ArrivalModulation()
+                     ) -> List[float]:
+    """Deterministic inference-request arrival times over ``[0, span)``.
+
+    Exactly the job-arrival machinery reused at serving granularity:
+    seeded uniform draws warped through the modulation's inverse
+    cumulative intensity (``repro.fleet.workload.make_warp``), so the
+    serve engine sees the same diurnal/bursty demand shapes the fleet
+    simulator does — ``request_arrivals(n, span,
+    arrival=SCENARIOS["bursty"].arrival)`` is the Fig. 15 serving
+    condition.  Returned sorted (a queue, not a job table)."""
+    if n < 0:
+        raise ValueError(f"n must be >= 0, got {n}")
+    if span <= 0 and n:
+        raise ValueError(f"span must be positive, got {span}")
+    rng = random.Random(seed)
+    us = [rng.uniform(0.0, span) for _ in range(n)]
+    if arrival.kind != "uniform":
+        warp = make_warp(arrival.intensity, span)
+        us = [warp(u) for u in us]
+    return sorted(us)

@@ -1,0 +1,16 @@
+"""Production serve path: continuous batching, paged KV cache, SLO-aware
+serving goodput.  (`repro.serve.jax_executor` — the real-model executor —
+is imported lazily by callers so this package stays importable without
+JAX, e.g. in the numpy-only benchmark CI jobs.)"""
+from repro.serve.engine import (NO_SLO, ContinuousServeEngine, ServeReport,
+                                ServeRequest, ServeSLO, SimulatedExecutor,
+                                run_static, synthetic_requests)
+from repro.serve.kv_cache import (FLASH_ATTENTION_BLOCK_K, KVCacheStats,
+                                  OutOfBlocksError, PagedKVCache)
+
+__all__ = [
+    "NO_SLO", "ContinuousServeEngine", "ServeReport", "ServeRequest",
+    "ServeSLO", "SimulatedExecutor", "run_static", "synthetic_requests",
+    "FLASH_ATTENTION_BLOCK_K", "KVCacheStats", "OutOfBlocksError",
+    "PagedKVCache",
+]

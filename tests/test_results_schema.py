@@ -14,6 +14,8 @@ import pathlib
 import pytest
 
 RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "fleet"
+SERVE_RESULTS = RESULTS.parent / "serve"
+REPO_ROOT = RESULTS.parents[1]
 
 
 def unit(x):
@@ -147,6 +149,41 @@ SCHEMAS = {
 }
 
 
+# one engine's metrics inside a serve_scale section (continuous/static)
+SERVE_ENGINE_ROW = {
+    "engine": str, "n_slots": positive, "requests": positive,
+    "tokens": positive, "tokens_within_slo": non_negative,
+    "slo_token_goodput": unit, "slo_goodput": unit,
+    "preemptions": non_negative, "span": positive,
+    "capacity_chip_time": positive,
+    "goodput": GOODPUT_ROW,
+    "ttft_s": {"mean": non_negative, "p50": non_negative,
+               "p99": non_negative},
+    "tpot_s": {"mean": non_negative, "p50": non_negative,
+               "p99": non_negative},
+    "rg_breakdown": each_value(unit),
+}
+
+# every section of results/serve/serve_scale.json (and the committed
+# BENCH_serve.json sections) is one equal-capacity A/B
+SERVE_AB_SECTION = {
+    "config": {"requests": positive, "span": positive, "n_slots": positive,
+               "arrival": str, "slo_ttft": positive, "slo_tpot": positive,
+               "seed": int},
+    "config_fingerprint": str,
+    "continuous": SERVE_ENGINE_ROW,
+    "static": SERVE_ENGINE_ROW,
+    # the PR acceptance invariant, shape-checked on every committed run:
+    # continuous must beat static on tokens delivered within SLO
+    "slo_tokens_margin": positive,
+    "slo_token_goodput_margin": positive,
+}
+
+SERVE_SCHEMAS = {
+    "serve_scale.json": each_value(SERVE_AB_SECTION),
+}
+
+
 def test_every_fleet_result_has_a_schema():
     files = sorted(p.name for p in RESULTS.glob("*.json"))
     assert files, f"no benchmark outputs under {RESULTS}"
@@ -164,6 +201,45 @@ def test_fleet_result_matches_schema(name):
         pytest.skip(f"{name} not generated in this checkout")
     problems = check(json.loads(path.read_text()), SCHEMAS[name], name)
     assert not problems, "\n".join(problems)
+
+
+def test_every_serve_result_has_a_schema():
+    files = sorted(p.name for p in SERVE_RESULTS.glob("*.json")) \
+        if SERVE_RESULTS.exists() else []
+    unschema = [f for f in files if f not in SERVE_SCHEMAS]
+    assert not unschema, (
+        f"results/serve file(s) without a schema: {unschema} — add one to "
+        "tests/test_results_schema.py so refactors can't silently change "
+        "their shape")
+
+
+@pytest.mark.parametrize("name", sorted(SERVE_SCHEMAS))
+def test_serve_result_matches_schema(name):
+    path = SERVE_RESULTS / name
+    if not path.exists():
+        pytest.skip(f"{name} not generated in this checkout")
+    problems = check(json.loads(path.read_text()), SERVE_SCHEMAS[name], name)
+    assert not problems, "\n".join(problems)
+
+
+def test_committed_serve_bench_has_continuous_ahead():
+    """PR acceptance: the committed BENCH_serve.json shows continuous
+    beating static on within-SLO tokens at equal capacity, in every
+    section."""
+    path = REPO_ROOT / "BENCH_serve.json"
+    if not path.exists():
+        pytest.skip("BENCH_serve.json not committed in this checkout")
+    bench = json.loads(path.read_text())
+    sections = {k: v for k, v in bench.items()
+                if isinstance(v, dict) and "slo_tokens_margin" in v}
+    assert "tiny" in sections
+    for name, section in sections.items():
+        problems = check(section, SERVE_AB_SECTION, f"BENCH_serve.{name}")
+        assert not problems, "\n".join(problems)
+        c, s = section["continuous"], section["static"]
+        assert c["n_slots"] == s["n_slots"]          # equal capacity
+        assert c["tokens"] == s["tokens"]            # equal work
+        assert c["tokens_within_slo"] > s["tokens_within_slo"], name
 
 
 def test_scenario_sweep_covers_the_acceptance_matrix():

@@ -35,13 +35,27 @@ def test_pad_group_full_batch_unchanged():
     assert pad_group(reqs, 4) == reqs
 
 
+def test_pad_group_empty_group_raises():
+    """Regression: an empty group used to hit modulo-by-zero in the
+    clone-source cycle; now it is rejected up front."""
+    with pytest.raises(ValueError, match="empty"):
+        pad_group([], 4)
+
+
+def test_server_rejects_nonpositive_batch():
+    from repro.configs import get_smoke
+
+    with pytest.raises(ValueError, match="batch"):
+        Server(get_smoke("smollm-135m"), batch=0, max_len=12)
+
+
 @pytest.fixture(scope="module")
 def smoke_server():
     from repro.configs import get_smoke
 
     cfg = get_smoke("smollm-135m")
     ledger = GoodputLedger(window=60.0)
-    server = Server(cfg, batch=4, prompt_len=8, max_len=12, ledger=ledger)
+    server = Server(cfg, batch=4, max_len=12, ledger=ledger)
     return cfg, server, ledger
 
 
@@ -100,7 +114,7 @@ def test_injected_tick_clock_makes_serve_accounting_deterministic():
     def run_once():
         clock = TickClock(dt=0.25)
         ledger = GoodputLedger(window=60.0)
-        server = Server(cfg, batch=2, prompt_len=8, max_len=12,
+        server = Server(cfg, batch=2, max_len=12,
                         ledger=ledger, clock=clock)
         reqs = [Request(i, np.full(8, i + 1, np.int32), 3,
                         t_submit=clock()) for i in range(3)]
@@ -111,3 +125,106 @@ def test_injected_tick_clock_makes_serve_accounting_deterministic():
     first, second = run_once(), run_once()
     assert first == second          # exact: every float bit-identical
     assert first["n_events"] > 0
+
+
+class CountingClock(TickClock):
+    """TickClock that also counts how many times it was read."""
+
+    def __init__(self, dt=0.25):
+        super().__init__(dt=dt)
+        self.reads = 0
+
+    def __call__(self):
+        self.reads += 1
+        return super().__call__()
+
+
+def _tick_server(batch=2, dt=0.25):
+    from repro.configs import get_smoke
+
+    cfg = get_smoke("smollm-135m")
+    clock = CountingClock(dt=dt)
+    ledger = GoodputLedger(window=60.0)
+    server = Server(cfg, batch=batch, max_len=12,
+                    ledger=ledger, clock=clock)
+    reqs = [Request(i, np.full(8, i + 1, np.int32), 3, t_submit=0.0)
+            for i in range(batch)]
+    return server, ledger, clock, reqs
+
+
+def test_run_batch_reads_clock_exactly_three_times():
+    """Regression (serve-clock skew): per-request clock reads used to
+    advance an injected TickClock mid-batch, so t_first/t_done drifted
+    past the emitted interval bounds.  A batch has exactly three time
+    boundaries — start, prefill end, decode end — and must read the
+    clock exactly once at each."""
+    server, _, clock, reqs = _tick_server()
+    server.run_batch(reqs)
+    assert clock.reads == 3
+    before = clock.reads
+    server.run_batch(reqs)
+    assert clock.reads - before == 3
+
+
+def test_request_timestamps_land_inside_emitted_intervals():
+    """t_first/t_done must be consistent with the intervals the emitter
+    books: with dt=0.25 the batch spans [t0, t0+0.5], t_first == t0+0.25
+    (prefill end) and t_done == t0+0.5 (decode end) for every request —
+    not one tick later per slot as under the per-request-read bug."""
+    server, ledger, _, reqs = _tick_server(batch=3)
+    server.run_batch(reqs)
+    t0, t1, t2 = 0.25, 0.5, 0.75
+    assert all(r.t_first == t1 for r in reqs)
+    assert all(r.t_done == t2 for r in reqs)
+    # and the per-slot phase intervals exactly tile batch x [t0, t2]
+    span_chip_time = server.batch * (t2 - t0)
+    booked = sum(ledger.phase_chip_time(p)
+                 for p in (Phase.INIT, Phase.STEP, Phase.IDLE))
+    assert booked == pytest.approx(span_chip_time)
+
+
+def test_run_batch_rejects_wrong_width():
+    """Regression: self.batch was stored but never checked, silently
+    running whatever width it was handed (breaking capacity math)."""
+    server, _, _, reqs = _tick_server(batch=2)
+    with pytest.raises(ValueError, match="batch"):
+        server.run_batch(reqs[:1])
+
+
+def test_server_no_longer_accepts_dead_prompt_len():
+    """Regression: Server(prompt_len=...) was accepted and ignored."""
+    from repro.configs import get_smoke
+
+    with pytest.raises(TypeError):
+        Server(get_smoke("smollm-135m"), batch=2, prompt_len=8, max_len=12)
+
+
+def test_capacity_derived_from_ledger_span():
+    """Regression: main() computed capacity as batch * (max t_done -
+    min t_submit) — mixing the request wall-clock base with the emitter
+    clock base and dividing by zero when they coincided.  Capacity now
+    comes from the server's own emitted span."""
+    server, ledger, _, reqs = _tick_server(batch=2)
+    assert server.capacity_chip_time() == 0.0   # degenerate: nothing run
+    server.run_batch(reqs)
+    # span is [first t0, last t2] on the injected clock: 0.25 -> 0.75
+    assert server.span() == pytest.approx(0.5)
+    assert server.capacity_chip_time() == pytest.approx(2 * 0.5)
+    rep = ledger.report(capacity_chip_time=server.capacity_chip_time())
+    assert 0.0 < rep.sg <= 1.0
+
+
+def test_degenerate_zero_span_guarded():
+    """A zero-dt clock collapses the span; throughput math must return
+    0.0 instead of raising ZeroDivisionError."""
+    from repro.configs import get_smoke
+    from repro.launch.serve import run_static_server
+
+    cfg = get_smoke("smollm-135m")
+    reqs = [Request(i, np.full(8, i + 1, np.int32), 2, t_submit=0.0)
+            for i in range(2)]
+    _, out = run_static_server(cfg, reqs, batch=2, max_new=2, prompt_len=8,
+                               clock=TickClock(dt=0.0))
+    assert out["throughput_tok_s"] == 0.0
+    assert out["capacity_chip_time"] == 0.0
+    assert out["tokens_generated"] == 4
