@@ -1,0 +1,267 @@
+"""Resiliency benchmark: rigid vs elastic gangs under failure presets
+(BENCH_resilience.json).
+
+The paper's pod-scale resiliency question: when a slice of a multi-slice
+gang dies (or a maintenance wave drains pods), is it better to hold the
+survivors and wait for replacement hardware (rigid), or to reshard onto
+the survivors and keep training degraded (elastic)?  This benchmark
+answers it with MPG, per layer, at equal capacity:
+
+  * both arms run the *same* workload on the *same* cluster under the
+    same scenario seed — the only difference is every job's ``elastic``
+    flag (the ``job_mutator`` hook, exactly how the what-if advisor
+    applies counterfactuals);
+  * the fleet is saturated (``SATURATED_LOAD``) and failed hardware
+    takes a repair window (``slice_repair_s``) to return — the regime
+    where the trade is real.  With instant repair a rigid gang's refill
+    is granted on the spot and neither arm can win;
+  * two sections, ``tiny`` (the golden-trace scale; seconds, run by CI)
+    and ``full`` (the paper-scale sweep); each records the MPG
+    composition, failure/preemption counts, reshard and gang-stall
+    chip-time, the attribution waterfall's per-layer losses, and the
+    headline ``recovered_mpg = elastic.MPG - rigid.MPG``;
+  * the tiny section's elastic arm runs under BOTH engines and asserts
+    bit-identical ledger totals — the cross-engine equivalence gate
+    extended to the repair-window machinery;
+  * an ``advisor`` section ranks the resiliency knobs
+    (``elastic_resize``, ``multi_slice_gang``) on the same failure
+    preset, tying the benchmark to the counterfactual advisor.
+
+The sim is deterministic, so ``--check`` can be exact: it re-runs the
+tiny section and fails if elastic stops beating rigid on either preset,
+or if any recovered-MPG value drifts from the committed baseline (same
+config fingerprint => same floats, on any machine).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import pathlib
+import resource
+import sys
+import time
+from typing import Dict, Optional
+
+from repro.core.attribution import AttributionWaterfall
+from repro.core.goodput import Phase
+from repro.fleet.advisor import SATURATED_LOAD, what_if
+from repro.fleet.scenarios import (GOLDEN_SIZE_MIX, SCENARIOS, build_sim)
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+BENCH_PATH = REPO_ROOT / "BENCH_resilience.json"
+DAY = 24 * 3600.0
+
+PRESETS = ("failure_storm", "maintenance")
+
+# hardware repair SLA: a failed slice's chips return to the allocator
+# after this long (swap + triage); the window that makes rigid gangs'
+# replacement waits — and elastic's degraded-throughput trade — real
+REPAIR_S = 4 * 3600.0
+
+TINY = {"n_jobs": 24, "seed": 1234, "n_pods": 2, "pod_size": 64,
+        "horizon_days": 1.0, "size_mix": GOLDEN_SIZE_MIX,
+        "slice_repair_s": REPAIR_S, "target_load": SATURATED_LOAD}
+FULL = {"n_jobs": 200, "seed": 42, "n_pods": 8, "pod_size": 256,
+        "horizon_days": 7.0, "size_mix": None,
+        "slice_repair_s": REPAIR_S, "target_load": SATURATED_LOAD}
+
+
+def _fingerprint(cfg: Dict) -> str:
+    return hashlib.sha256(
+        json.dumps(cfg, sort_keys=True).encode()).hexdigest()[:16]
+
+
+def _peak_rss_mb() -> float:
+    # ru_maxrss is KiB on Linux, bytes on macOS
+    peak = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    if sys.platform == "darwin":
+        peak /= 1024
+    return round(peak / 1024, 1)
+
+
+def _build(preset: str, cfg: Dict, elastic: bool, engine: str):
+    scenario = dataclasses.replace(SCENARIOS[preset],
+                                   target_load=cfg["target_load"])
+    mutator = (lambda j: dataclasses.replace(j, elastic=elastic))
+    return build_sim(scenario, n_jobs=cfg["n_jobs"], seed=cfg["seed"],
+                     n_pods=cfg["n_pods"], pod_size=cfg["pod_size"],
+                     horizon=cfg["horizon_days"] * DAY,
+                     size_mix=cfg["size_mix"],
+                     slice_repair_s=cfg["slice_repair_s"],
+                     engine=engine, retain_intervals=False,
+                     job_mutator=mutator)
+
+
+def _run_arm(preset: str, cfg: Dict, elastic: bool,
+             engine: str = "vectorized") -> Dict:
+    sim = _build(preset, cfg, elastic, engine)
+    wf = AttributionWaterfall().attach(sim.ledger)
+    t0 = time.perf_counter()
+    sim.run()
+    wall = time.perf_counter() - t0
+    wf.assert_conserves(sim.ledger)
+    rep = sim.report()
+    wfr = wf.report()
+    buckets = {r["bucket"]: r["chip_time"] for r in wfr["losses"]}
+    runtimes = list(sim.jobs.values())
+    return {
+        "SG": round(rep.sg, 6), "RG": round(rep.rg, 6),
+        "PG": round(rep.pg, 6), "MPG": round(rep.mpg, 6),
+        "failures": sum(r.failures for r in runtimes),
+        "preemptions": sum(r.preemptions for r in runtimes),
+        "reshard_chip_time": round(
+            sim.ledger.phase_chip_time(Phase.RESHARD), 1),
+        "gang_stall_chip_time": round(buckets.get("gang_stall", 0.0), 1),
+        "lost_by_layer": {k: round(v, 1)
+                          for k, v in wfr["lost_by_layer"].items()},
+        "wall_s": round(wall, 3),
+    }
+
+
+def _equivalence_totals(preset: str, cfg: Dict) -> Dict:
+    """Both engines on the elastic arm must stream bit-identical ledger
+    totals — the golden-trace equivalence bar, under a repair window."""
+    tv = _build(preset, cfg, True, "vectorized")
+    tr = _build(preset, cfg, True, "reference")
+    tv.run()
+    tr.run()
+    a, b = tv.ledger.totals(), tr.ledger.totals()
+    assert a == b, f"engines diverged on {preset}: {a} != {b}"
+    return {"n_events": a["n_events"], "engines_identical": True}
+
+
+def _preset_section(preset: str, cfg: Dict, cross_engine: bool) -> Dict:
+    rigid = _run_arm(preset, cfg, elastic=False)
+    elastic = _run_arm(preset, cfg, elastic=True)
+    layers = sorted(set(rigid["lost_by_layer"]) | set(elastic["lost_by_layer"]))
+    section = {
+        "rigid": rigid,
+        "elastic": elastic,
+        "recovered_mpg": round(elastic["MPG"] - rigid["MPG"], 6),
+        # positive = elastic sheds loss in that layer (chip-time the
+        # rigid arm burned there and the elastic arm did not)
+        "recovered_by_layer": {
+            k: round(rigid["lost_by_layer"].get(k, 0.0)
+                     - elastic["lost_by_layer"].get(k, 0.0), 1)
+            for k in layers},
+    }
+    if cross_engine:
+        section["equivalence"] = _equivalence_totals(preset, cfg)
+    return section
+
+
+def _scale_section(cfg: Dict, cross_engine: bool) -> Dict:
+    section: Dict[str, object] = {
+        "config": {**cfg, "repair_hours": cfg["slice_repair_s"] / 3600.0},
+        "config_fingerprint": _fingerprint(cfg),
+    }
+    for preset in PRESETS:
+        section[preset] = _preset_section(preset, cfg, cross_engine)
+    return section
+
+
+def run_advisor() -> Dict:
+    """Rank the resiliency knobs on the failure preset the benchmark
+    sweeps, under the same repair window (what_if saturates on its own)."""
+    rep = what_if("failure_storm",
+                  knobs=["elastic_resize", "multi_slice_gang"],
+                  n_jobs=TINY["n_jobs"], seed=TINY["seed"],
+                  n_pods=TINY["n_pods"], pod_size=TINY["pod_size"],
+                  horizon=TINY["horizon_days"] * DAY,
+                  size_mix=TINY["size_mix"],
+                  slice_repair_s=TINY["slice_repair_s"])
+    return {
+        "scenario": rep["scenario"],
+        "baseline_mpg": round(rep["baseline"]["MPG"], 6),
+        "ranking": [{"knob": r["knob"], "targets": r["targets"],
+                     "recovered_mpg": round(r["recovered_mpg"], 6),
+                     "d_sg": round(r["d_sg"], 6),
+                     "d_rg": round(r["d_rg"], 6),
+                     "d_pg": round(r["d_pg"], 6)}
+                    for r in rep["ranking"]],
+    }
+
+
+def _load_committed() -> Dict:
+    if BENCH_PATH.exists():
+        return json.loads(BENCH_PATH.read_text())
+    return {}
+
+
+def _write(bench: Dict) -> None:
+    bench["version"] = 1
+    bench["generated_by"] = "benchmarks/resilience.py"
+    bench["peak_rss_mb"] = _peak_rss_mb()
+    BENCH_PATH.write_text(json.dumps(bench, indent=1, sort_keys=True) + "\n")
+
+
+def check(fresh_tiny: Dict, committed: Dict) -> None:
+    """CI gate, two-part: (1) elastic must beat rigid on every preset;
+    (2) the sim is deterministic, so when the committed baseline ran the
+    same config the recovered-MPG values must match exactly."""
+    for preset in PRESETS:
+        rec = fresh_tiny[preset]["recovered_mpg"]
+        if not rec > 0:
+            raise SystemExit(
+                f"resilience --check FAILED: elastic does not beat rigid "
+                f"on {preset} (recovered_mpg={rec})")
+    base = committed.get("tiny")
+    if not base:
+        print("resilience --check: no committed baseline; ordering gate "
+              "only")
+        return
+    if base.get("config_fingerprint") != fresh_tiny["config_fingerprint"]:
+        print("resilience --check: tiny config changed; committed baseline "
+              "not comparable — skipping exact gate (commit a fresh "
+              "BENCH_resilience.json)")
+        return
+    for preset in PRESETS:
+        got = fresh_tiny[preset]["recovered_mpg"]
+        want = base[preset]["recovered_mpg"]
+        if got != want:
+            raise SystemExit(
+                f"resilience --check FAILED: {preset} recovered_mpg "
+                f"{got} != committed {want} (the sim is deterministic — "
+                f"a semantic change must re-bless the baseline)")
+    print("resilience --check OK: elastic > rigid on "
+          f"{', '.join(PRESETS)}; exact match vs committed baseline")
+
+
+def main(tiny: bool = False, do_check: bool = False) -> Dict:
+    committed = _load_committed()
+    bench = dict(committed)
+    t_start = time.monotonic()
+    fresh_tiny = _scale_section(TINY, cross_engine=True)
+    bench["tiny"] = fresh_tiny
+    if do_check:
+        check(fresh_tiny, committed)
+    if not tiny:
+        bench["full"] = _scale_section(FULL, cross_engine=False)
+        bench["advisor"] = run_advisor()
+    _write(bench)
+    wall_us = (time.monotonic() - t_start) * 1e6
+    derived = {
+        "tiny_recovered_storm": bench["tiny"]["failure_storm"]["recovered_mpg"],
+        "tiny_recovered_maint": bench["tiny"]["maintenance"]["recovered_mpg"],
+    }
+    if "full" in bench:
+        derived["full_recovered_storm"] = \
+            bench["full"]["failure_storm"]["recovered_mpg"]
+        derived["full_recovered_maint"] = \
+            bench["full"]["maintenance"]["recovered_mpg"]
+    print(f"resilience,{wall_us:.1f},{json.dumps(derived, sort_keys=True)}")
+    return bench
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: only the tiny rigid-vs-elastic A/B")
+    ap.add_argument("--check", action="store_true",
+                    help="fail if elastic stops beating rigid, or any "
+                         "recovered-MPG drifts from the committed "
+                         "BENCH_resilience.json")
+    args = ap.parse_args()
+    main(tiny=args.tiny, do_check=args.check)

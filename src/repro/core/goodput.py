@@ -33,6 +33,9 @@ class Phase(enum.Enum):
                                      # missed its deadline — an RG loss the
                                      # batching/admission policy is
                                      # responsible for)
+    RESHARD = "reshard"              # elastic resize: moving checkpointed
+                                     # shards between the old and new
+                                     # partition assignments (RG loss)
 
 
 class Layer(enum.Enum):
@@ -67,6 +70,7 @@ DEFAULT_LAYER: Dict[Phase, Layer] = {
     Phase.LOST: Layer.HARDWARE,
     Phase.IDLE: Layer.SCHEDULING,
     Phase.SLO_BREACH: Layer.SCHEDULING,
+    Phase.RESHARD: Layer.SCHEDULING,
 }
 
 # (Phase, Layer) -> named loss bucket: the rows of the attribution
@@ -86,7 +90,11 @@ LOSS_BUCKETS: Dict[tuple, str] = {
     (Phase.LOST, Layer.SCHEDULING): "preemption_rollback",
     (Phase.IDLE, Layer.SCHEDULING): "batch_bubble",
     (Phase.IDLE, Layer.FRAMEWORK): "host_idle",
+    # healthy gang slices holding their allocation while a rigid job
+    # waits for a replacement slice after a hardware failure
+    (Phase.IDLE, Layer.HARDWARE): "gang_stall",
     (Phase.SLO_BREACH, Layer.SCHEDULING): "slo_breach",
+    (Phase.RESHARD, Layer.SCHEDULING): "reshard_transfer",
 }
 
 
@@ -130,7 +138,7 @@ class Interval:
 
 ALLOCATED_PHASES = {Phase.INIT, Phase.STEP, Phase.CHECKPOINT,
                     Phase.DATA_STALL, Phase.LOST, Phase.IDLE,
-                    Phase.SLO_BREACH}
+                    Phase.SLO_BREACH, Phase.RESHARD}
 PRODUCTIVE_PHASES = {Phase.STEP}
 
 

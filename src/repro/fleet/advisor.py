@@ -16,7 +16,11 @@ knobs, each a single optimization the paper evaluates:
   * ``scheduler_paper_policies``— swap placement/preemption/defrag to the
     paper's policy combination;
   * ``generation_upgrade``      — upgrade every pod to the best hardware
-    generation present.
+    generation present;
+  * ``elastic_resize``          — let every job restart degraded (shed
+    slices / halve width) instead of queueing for its full shape;
+  * ``multi_slice_gang``        — run every even-width training job as a
+    2-slice gang so a failure kills one slice, not the job.
 
 Because the workload generation is hermetic (``scenarios.build_sim``),
 every counterfactual run sees the byte-identical job population with only
@@ -140,6 +144,18 @@ def _knob_policies(case: Case) -> Case:
                             defrag="drain_for_xl")
 
 
+def _knob_elastic(case: Case) -> Case:
+    return case.with_jobs(lambda j: dataclasses.replace(j, elastic=True))
+
+
+def _knob_gang(case: Case) -> Case:
+    # widen coverage beyond the workload's default gang band: any still-
+    # single-slice training job of even width splits into a 2-slice gang
+    return case.with_jobs(lambda j: dataclasses.replace(j, n_slices=2)
+                          if j.phase_kind == "train" and j.n_slices == 1
+                          and j.chips >= 2 and j.chips % 2 == 0 else j)
+
+
 def _knob_generation(case: Case) -> Case:
     gens = case.scenario.pod_generations
     if not gens:
@@ -170,6 +186,12 @@ KNOBS: Dict[str, Knob] = {k.name: k for k in (
     Knob("generation_upgrade",
          "upgrade every pod to the best hardware generation present",
          "PG", _knob_generation),
+    Knob("elastic_resize",
+         "restart preempted/failed jobs degraded instead of queueing "
+         "for the full shape", "SG", _knob_elastic),
+    Knob("multi_slice_gang",
+         "run every even-width training job as a 2-slice gang "
+         "(failures kill a slice, not the job)", "RG", _knob_gang),
 )}
 
 
@@ -223,6 +245,9 @@ def from_trace(trace: Trace) -> Case:
         n_pods=meta["n_pods"], pod_size=meta["pod_size"],
         horizon=meta["horizon"], placement=meta["placement"],
         preemption=meta["preemption"], defrag=meta["defrag"],
+        # older traces predate the repair-window knob; default 0 matches
+        # the behaviour they were recorded under
+        slice_repair_s=meta.get("slice_repair_s", 0.0),
         # pair lists preserve the insertion order the workload's size
         # picker depends on (trace JSON sorts plain dict keys)
         size_mix=dict(size_mix) if size_mix else None,

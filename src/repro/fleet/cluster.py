@@ -19,6 +19,21 @@ def _is_pow2(n: int) -> bool:
     return n > 0 and (n & (n - 1)) == 0
 
 
+SLICE_SEP = "#s"     # gang-slice allocation ids: "<job_id>#s<k>"
+
+# sentinel prefix: a failed slice's chips held out of service until its
+# repair window elapses (SimConfig.slice_repair_s); unlike maintenance
+# sentinels these are sub-pod and do NOT mark their pod reserved
+REPAIR_TAG = "__repair__"
+
+
+def owner_of(alloc_id: str) -> str:
+    """Owning job of an allocation id: gang slices allocate per-slice
+    under ``"<job_id>#s<k>"``; every other allocation is its own owner."""
+    i = alloc_id.find(SLICE_SEP)
+    return alloc_id[:i] if i >= 0 else alloc_id
+
+
 @dataclasses.dataclass
 class Allocation:
     job_id: str
@@ -158,6 +173,13 @@ class Cluster:
         else:
             for pid in alloc.pods:
                 self.pods[pid].release(0)
+
+    def retag(self, old_id: str, new_id: str) -> None:
+        """Transfer an allocation to a sentinel owner (a failed slice held
+        out of service for repair) without touching the free lists — the
+        chips stay occupied, only the owning id changes."""
+        a = self.allocations.pop(old_id)
+        self.allocations[new_id] = dataclasses.replace(a, job_id=new_id)
 
     def reserve_pod(self, pod_id: int, tag: str) -> None:
         """Take a whole (empty) pod out of service under a sentinel

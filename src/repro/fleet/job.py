@@ -40,7 +40,33 @@ class JobSpec:
     data_stall_frac: float = 0.03          # input-pipeline stall fraction
     pg: float = 0.45                       # Program Goodput of its program
     elastic: bool = False
+    n_slices: int = 1                      # gang width: independent slices
     arrival: float = 0.0
+
+    def __post_init__(self):
+        # a zero-chip or negative-work spec silently corrupts ledger
+        # totals (chip_time factors `chips`; remaining starts at `work`)
+        if self.chips < 1:
+            raise ValueError(f"{self.job_id}: chips must be >= 1, "
+                             f"got {self.chips}")
+        if self.work <= 0:
+            raise ValueError(f"{self.job_id}: work must be > 0, "
+                             f"got {self.work}")
+        if self.checkpoint_interval <= 0:
+            raise ValueError(f"{self.job_id}: checkpoint_interval must be "
+                             f"> 0, got {self.checkpoint_interval}")
+        if self.n_slices < 1:
+            raise ValueError(f"{self.job_id}: n_slices must be >= 1, "
+                             f"got {self.n_slices}")
+        if self.chips % self.n_slices:
+            raise ValueError(f"{self.job_id}: chips ({self.chips}) must "
+                             f"divide evenly into n_slices "
+                             f"({self.n_slices}) equal slices")
+
+    @property
+    def slice_chips(self) -> int:
+        """Chips per gang slice (== chips for single-slice jobs)."""
+        return self.chips // self.n_slices
 
     @property
     def size_class(self) -> str:
@@ -80,7 +106,16 @@ class JobRuntime:
     started: Optional[float] = None    # current allocation start
     preemptions: int = 0
     failures: int = 0
+    target_chips: int = 0              # submitted width (regrow target)
+    target_slices: int = 0             # submitted gang width
+    last_chips: int = 0                # width of the last run segment
+                                       # (0 until first scheduled; a width
+                                       # change on restart pays a reshard)
 
     def __post_init__(self):
         if self.remaining == 0.0:
             self.remaining = self.spec.work
+        if self.target_chips == 0:
+            self.target_chips = self.spec.chips
+        if self.target_slices == 0:
+            self.target_slices = self.spec.n_slices

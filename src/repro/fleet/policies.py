@@ -22,6 +22,8 @@ from __future__ import annotations
 
 from typing import Dict, List, Optional, Tuple, Type, Union
 
+from repro.fleet.cluster import REPAIR_TAG, owner_of
+
 # ---------------------------------------------------------------------------
 # placement
 # ---------------------------------------------------------------------------
@@ -129,14 +131,21 @@ class PreemptionPolicy:
         eff = sim._eff_priority(job.spec.job_id)
         usable = []
         for pod in sim.cluster.pods:
-            occupants = sim.cluster.pod_jobs(pod.pod_id)
+            # gang slices allocate per-slice under "<job>#s<k>"; evicting
+            # any slice displaces the whole gang, so dedup to owners
+            owners: List[str] = []
+            for alloc_id in sim.cluster.pod_jobs(pod.pod_id):
+                o = owner_of(alloc_id)
+                if o not in owners:
+                    owners.append(o)
             cost, ok = 0.0, True
-            for j in occupants:
+            for j in owners:
                 if j not in sim.jobs:        # maintenance reservation
                     ok = False
                     break
                 v = sim.jobs[j]
-                if v.spec.chips > sim.cfg.pod_size:   # another XL: immovable
+                if v.spec.chips > sim.cfg.pod_size \
+                        and v.spec.n_slices == 1:     # single-slice XL: immovable
                     ok = False
                     break
                 if v.spec.priority >= eff:   # never displace higher priority
@@ -144,11 +153,16 @@ class PreemptionPolicy:
                     break
                 cost += v.spec.chips
             if ok:
-                usable.append((cost, pod.pod_id, occupants))
+                usable.append((cost, pod.pod_id, owners))
         if len(usable) < need:
             return None
         usable.sort()
-        return [j for _, _, occ in usable[:need] for j in occ]
+        victims: List[str] = []
+        for _, _, owners in usable[:need]:
+            for j in owners:
+                if j not in victims:         # a gang may span chosen pods
+                    victims.append(j)
+        return victims
 
 
 class ProtectXLPreemption(PreemptionPolicy):
@@ -224,18 +238,28 @@ class DefragPolicy:
         cannot fit would exclude every pod from scheduling and deadlock
         the fleet (found by the tiny golden-trace configs, where the
         workload can emit cluster-sized requests).
+
+        The trigger keys on *slice* width: only jobs whose slices need
+        whole pods benefit from whole-pod drains.  A gang whose slices
+        are sub-pod places into fragmented pods — and respects the drain
+        exclusion, so draining for it would starve its own placement.
         """
         pod_size = sim.cfg.pod_size
         reserved = getattr(sim.cluster, "reserved_pods", None)
         if reserved is None:
+            # maintenance sentinels only: repair holds are sub-pod and do
+            # not reserve their pod (mirrors the indexed cluster's
+            # ``reserved_pods``, which tracks ``reserve_pod`` tags alone)
             reserved = {a.pod for tag, a in sim.cluster.allocations.items()
-                        if tag not in sim.jobs and a.pod >= 0}
+                        if owner_of(tag) not in sim.jobs and a.pod >= 0
+                        and not tag.startswith(REPAIR_TAG)}
         serviceable = [p for p in sim.cluster.pods
                        if p.pod_id not in reserved]
         max_chips = len(serviceable) * pod_size
         xl_need = max((sim.jobs[j].spec.chips // pod_size
                        for j in sim.queue
-                       if pod_size < sim.jobs[j].spec.chips <= max_chips),
+                       if pod_size < sim.jobs[j].spec.slice_chips
+                       and sim.jobs[j].spec.chips <= max_chips),
                       default=0)
         if xl_need == 0:
             return ()

@@ -214,7 +214,8 @@ def build_sim(scenario: Scenario, *, n_jobs: int = 200, seed: int = 0,
               size_mix: Optional[Dict[str, float]] = None,
               job_mutator: Optional[Callable] = None,
               engine: str = "vectorized",
-              sample_dt: Optional[float] = None) -> FleetSim:
+              sample_dt: Optional[float] = None,
+              slice_repair_s: float = 0.0) -> FleetSim:
     """A ready-to-run ``FleetSim`` for one scenario.
 
     Hermetic by construction: the pg table defaults to ``{}`` (per-arch PG
@@ -231,6 +232,7 @@ def build_sim(scenario: Scenario, *, n_jobs: int = 200, seed: int = 0,
                     seed=seed, placement=placement, preemption=preemption,
                     defrag=defrag, retain_intervals=retain_intervals,
                     engine=engine, sample_dt=sample_dt,
+                    slice_repair_s=slice_repair_s,
                     scenario=scenario)
     sim = FleetSim(cfg, ledger=ledger)
     profile = (scenario.arrival.intensity

@@ -30,11 +30,12 @@ from typing import TYPE_CHECKING, Dict, List, Optional, Tuple, Union
 
 from repro.core.goodput import Interval, Layer, Phase, generation_pg_weights
 from repro.core.ledger import GoodputLedger
-from repro.fleet.cluster import Cluster
+from repro.fleet.cluster import REPAIR_TAG, SLICE_SEP, Cluster, owner_of
 from repro.fleet.job import JobRuntime, JobSpec
 from repro.fleet.policies import (DefragPolicy, PlacementPolicy,
                                   PreemptionPolicy, resolve_defrag,
                                   resolve_placement, resolve_preemption)
+from repro.parallel.reshard import reshard_seconds
 
 if TYPE_CHECKING:                     # import cycle: scenarios builds sims
     from repro.fleet.scenarios import Scenario
@@ -58,6 +59,14 @@ class SimConfig:
     aging_hours: float = 6.0                 # queue aging: +1 priority / N h
     preempt_gap: float = 1.0                 # min priority advantage to evict
     drain_cap: int = 4                       # max migrations per event
+    # hardware repair window: a failed slice's chips stay out of service
+    # this many seconds before returning to the allocator.  0 (default)
+    # models instant replacement — the failed chips free immediately, so
+    # a rigid gang's refill is usually granted on the spot.  >0 makes
+    # replacement scarce: rigid gangs hold survivors idle (gang_stall)
+    # while elastic gangs keep computing degraded — the resiliency trade
+    # benchmarks/resilience.py measures.
+    slice_repair_s: float = 0.0
     # pluggable scheduler policies (name or strategy object; see
     # repro.fleet.policies for the registries)
     placement: Union[str, PlacementPolicy] = "best_fit"
@@ -86,6 +95,9 @@ class SimConfig:
         if self.sample_dt is not None and not self.sample_dt > 0:
             raise ValueError(
                 f"SimConfig.sample_dt must be > 0, got {self.sample_dt!r}")
+        if self.slice_repair_s < 0:
+            raise ValueError(f"SimConfig.slice_repair_s must be >= 0, "
+                             f"got {self.slice_repair_s!r}")
 
 
 class FleetSim:
@@ -121,6 +133,19 @@ class FleetSim:
         # PARTIAL (counts against per-class SG, paper Fig. 16) rather than
         # initial QUEUED (a fleet-capacity matter, not a per-job one).
         self._requeued: set = set()
+        # gang bookkeeping: live slice-allocation ids per job (single-slice
+        # jobs allocate under their bare id), a monotonic per-job slice
+        # counter (dead slice ids are never reused), and rigid gangs whose
+        # survivors hold their allocation while waiting for a replacement
+        # slice ({"t0": wait start})
+        self._slices: Dict[str, List[str]] = {}
+        self._slice_seq: Dict[str, int] = defaultdict(int)
+        self._gang_wait: Dict[str, dict] = {}
+        self._repair_seq = 0                 # monotonic repair sentinel ids
+        # running elastic jobs currently below their submitted shape, in
+        # degradation order (a dict, not a set: iteration order must be
+        # deterministic and identical across engines)
+        self._degraded: Dict[str, None] = {}
         # scheduler policies (cfg.preempt_protect_xl=False is the legacy
         # spelling of the priority_only ablation)
         preemption = cfg.preemption
@@ -187,7 +212,10 @@ class FleetSim:
 
     # ---- interval ledger -------------------------------------------------
     def _emit(self, job: JobRuntime, phase: Phase, t0: float, t1: float,
-              layer: Layer, gen: Optional[Tuple[str, float]] = None):
+              layer: Layer, gen: Optional[Tuple[str, float]] = None,
+              chips: Optional[int] = None):
+        """``chips`` overrides the spec width for intervals narrower than
+        the job (a rigid gang's surviving slices stalling on a dead one)."""
         if t1 <= t0:
             return
         s = job.spec
@@ -205,19 +233,26 @@ class FleetSim:
             segment["generation"] = gen[0]
             pg = s.pg * gen[1]
         self.ledger.emit(job_id=s.job_id, phase=phase, t0=t0, t1=t1,
-                         chips=s.chips, segment=segment, pg=pg)
+                         chips=s.chips if chips is None else chips,
+                         segment=segment, pg=pg)
 
     def _gen_of(self, job_id: str) -> Tuple[str, float]:
         """(generation name, PG weight) of a job's current allocation;
-        multi-pod slices average their pods' weights."""
-        alloc = self.cluster.allocations.get(job_id)
-        if alloc is None:
+        multi-pod and multi-slice allocations average their pods'
+        weights."""
+        pods: List[int] = []
+        for sid in self._slices.get(job_id, ()):
+            alloc = self.cluster.allocations.get(sid)
+            if alloc is None:
+                continue
+            if alloc.pod >= 0:
+                pods.append(alloc.pod)
+            else:
+                pods.extend(alloc.pods)
+        if not pods:
             return "tpu-v5e", 1.0
-        if alloc.pod >= 0:
-            return self.pod_generation[alloc.pod], self.pod_factor[alloc.pod]
-        gens = {self.pod_generation[p] for p in alloc.pods}
-        factor = (sum(self.pod_factor[p] for p in alloc.pods)
-                  / len(alloc.pods))
+        gens = {self.pod_generation[p] for p in pods}
+        factor = sum(self.pod_factor[p] for p in pods) / len(pods)
         return (gens.pop() if len(gens) == 1 else "mixed"), factor
 
     # ---- productive-rate model -------------------------------------------
@@ -242,24 +277,194 @@ class FleetSim:
         waited = self.now - self._queued_since.get(job_id, self.now)
         return base + waited / (self.cfg.aging_hours * 3600.0)
 
+    # ---- gang-aware allocation -------------------------------------------
+    def _place(self, alloc_id: str, chips: int,
+               exclude: tuple = ()):
+        """Engine hook: one placement-policy allocation (the vectorized
+        engine substitutes its failure-memoized variant)."""
+        return self.placement.alloc(self.cluster, alloc_id, chips,
+                                    exclude=exclude)
+
+    def _alloc_job(self, job_id: str, spec: JobSpec,
+                   exclude: tuple = ()) -> bool:
+        """Allocate every slice of ``spec`` (one allocation under the bare
+        id for single-slice jobs); rolls back on partial failure."""
+        if spec.n_slices == 1:
+            if self._place(job_id, spec.chips, exclude) is None:
+                return False
+            self._slices[job_id] = [job_id]
+            return True
+        per = spec.slice_chips
+        ids: List[str] = []
+        for _ in range(spec.n_slices):
+            self._slice_seq[job_id] += 1
+            sid = f"{job_id}{SLICE_SEP}{self._slice_seq[job_id]}"
+            if self._place(sid, per, exclude) is None:
+                for done in ids:
+                    self.cluster.release(done)
+                return False
+            ids.append(sid)
+        self._slices[job_id] = ids
+        return True
+
+    def _release_job(self, job_id: str):
+        self._degraded.pop(job_id, None)
+        for sid in self._slices.pop(job_id, (job_id,)):
+            self.cluster.release(sid)
+
+    def _evict_gang_wait(self, job_id: str):
+        """Close a rigid gang's replacement wait: book the survivors' hold
+        as hardware-layer IDLE (gang_stall), free everything, requeue."""
+        w = self._gang_wait.pop(job_id)
+        job = self.jobs[job_id]
+        s = job.spec
+        self._emit(job, Phase.IDLE, w["t0"], self.now,
+                   layer=Layer.HARDWARE, chips=s.chips - s.slice_chips)
+        self._release_job(job_id)
+        self._queued_since[job_id] = self.now
+        self._requeued.add(job_id)
+        self.queue.append(job_id)
+
+    def _refill_gangs(self, drain: tuple):
+        """Try to grant each waiting rigid gang its replacement slice; on
+        success the survivors' wait books as hardware-layer IDLE and the
+        gang restarts from checkpoint at full width."""
+        for job_id in list(self._gang_wait):
+            job = self.jobs[job_id]
+            s = job.spec
+            exclude = drain if s.slice_chips <= self.cfg.pod_size else ()
+            self._slice_seq[job_id] += 1
+            sid = f"{job_id}{SLICE_SEP}{self._slice_seq[job_id]}"
+            if self._place(sid, s.slice_chips, exclude) is None:
+                continue
+            w = self._gang_wait.pop(job_id)
+            self._slices[job_id].append(sid)
+            self._emit(job, Phase.IDLE, w["t0"], self.now,
+                       layer=Layer.HARDWARE, chips=s.chips - s.slice_chips)
+            self._start_segment(job)
+
+    def _retire_slice(self, sid: str):
+        """Free a failed slice's hardware — immediately when repair is
+        instant (``slice_repair_s == 0``, byte-identical to the historical
+        behaviour), otherwise held under a repair sentinel until a timed
+        ``repair`` event returns the chips to the allocator."""
+        repair = self.cfg.slice_repair_s
+        if repair <= 0:
+            self.cluster.release(sid)
+            return
+        self._repair_seq += 1
+        tag = f"{REPAIR_TAG}{self._repair_seq}"
+        self.cluster.retag(sid, tag)
+        self._push(self.now + repair, "repair", tag)
+
+    def _regrow_elastic(self, drain: tuple):
+        """Grow running degraded elastic jobs back toward their submitted
+        shape as capacity frees (checkpoint-restart at the wider shape,
+        paying the reshard transfer back up).
+
+        Only runs under a repair window (``slice_repair_s > 0``): with
+        instant repair the failed chips free on the spot, so a degraded
+        job's own dead slice would be immediately re-grantable and the
+        degrade/regrow pair would collapse into restart churn — the
+        requeue-time regrow in :meth:`_sched_one` already covers that
+        idealized regime."""
+        if self.cfg.slice_repair_s <= 0 or not self._degraded:
+            return
+        for job_id in list(self._degraded):
+            job = self.jobs[job_id]
+            s = job.spec
+            exclude = drain if s.slice_chips <= self.cfg.pod_size else ()
+            if job.target_slices > 1:
+                # gang: re-admit slices one at a time
+                grown = False
+                while job.spec.n_slices < job.target_slices:
+                    self._slice_seq[job_id] += 1
+                    sid = f"{job_id}{SLICE_SEP}{self._slice_seq[job_id]}"
+                    if self._place(sid, s.slice_chips, exclude) is None:
+                        break
+                    if not grown:
+                        grown = True
+                        self._stop_segment(job, lost=False)  # ckpt-resume
+                    self._slices[job_id].append(sid)
+                    k = job.spec.n_slices + 1
+                    job.spec = dataclasses.replace(
+                        job.spec, chips=s.slice_chips * k, n_slices=k)
+                if grown:
+                    self._start_segment(job)
+            else:
+                # halved single-slice job: place the full shape first
+                # (under a scratch id, so failure leaves the job
+                # untouched), then swap allocations
+                tmp = f"{job_id}{SLICE_SEP}grow"
+                if self._place(tmp, job.target_chips, exclude) is None:
+                    continue
+                self._stop_segment(job, lost=False)          # ckpt-resume
+                self.cluster.release(job_id)
+                self.cluster.retag(tmp, job_id)
+                job.spec = dataclasses.replace(s, chips=job.target_chips)
+                self._start_segment(job)
+            if job.spec.chips >= job.target_chips:
+                self._degraded.pop(job_id, None)
+
+    def _slice_failure(self, job: JobRuntime, rng: random.Random):
+        """A hardware failure hits one slice of ``job`` (the whole job for
+        single-slice specs).  Elastic gangs shed the dead slice and restart
+        in place on the survivors (paying the reshard transfer); rigid
+        gangs hold the survivors and wait for a replacement slice.  The
+        dead slice's chips go to repair (:meth:`_retire_slice`)."""
+        s = job.spec
+        job_id = s.job_id
+        job.failures += 1
+        self._stop_segment(job, lost=True)       # hardware rollback
+        if s.n_slices > 1:
+            k = rng.randrange(s.n_slices)        # which slice died
+            sid = self._slices[job_id].pop(k)
+            self._retire_slice(sid)
+            if job.remaining <= 0:
+                self._release_job(job_id)
+                return
+            if s.elastic:
+                # degrade: reshard onto the surviving slices, in place
+                job.spec = dataclasses.replace(
+                    s, chips=s.slice_chips * (s.n_slices - 1),
+                    n_slices=s.n_slices - 1)
+                self._start_segment(job)
+                self._degraded[job_id] = None
+            else:
+                self._gang_wait[job_id] = {"t0": self.now}
+            return
+        self._degraded.pop(job_id, None)
+        for sid in self._slices.pop(job_id, (job_id,)):
+            self._retire_slice(sid)
+        if job.remaining > 0:
+            self._queued_since[job_id] = self.now
+            self._requeued.add(job_id)
+            self.queue.append(job_id)
+
     def _drain_for_xl(self) -> tuple:
         """When a multi-pod job queues, reserve + drain pods chosen by the
         defrag policy (the paper's defragmentation at pod granularity)."""
         drain = tuple(self.defrag.drain_pods(self))
         migrated = 0
         for pid in drain:
-            for job_id in list(self.cluster.pod_jobs(pid)):
+            seen = set()
+            for alloc_id in list(self.cluster.pod_jobs(pid)):
                 if migrated >= self.cfg.drain_cap:  # churn cap per event
                     break
-                if job_id not in self.jobs:   # maintenance reservation
-                    continue
+                job_id = owner_of(alloc_id)
+                if job_id not in self.jobs or job_id in seen:
+                    continue   # maintenance reservation / other gang slice
+                seen.add(job_id)
                 v = self.jobs[job_id]
+                if job_id in self._gang_wait:
+                    self._evict_gang_wait(job_id)
+                    migrated += 1
+                    continue
                 if v.spec.chips > 64:   # migrate only small/medium
                     continue
                 self._stop_segment(v, lost=False)   # checkpoint-resume
-                self.cluster.release(job_id)
-                if self.placement.alloc(self.cluster, job_id, v.spec.chips,
-                                        exclude=drain) is not None:
+                self._release_job(job_id)
+                if self._alloc_job(job_id, v.spec, exclude=drain):
                     if v.spec.init_time != self.cfg.defrag_migration_cost:
                         v.spec = dataclasses.replace(
                             v.spec, init_time=self.cfg.defrag_migration_cost)
@@ -272,44 +477,71 @@ class FleetSim:
                 migrated += 1
         return drain
 
+    def _sched_one(self, job: JobRuntime, drain: tuple) -> bool:
+        """One queued job's placement attempt; shared verbatim by both
+        engines (the vectorized engine substitutes ``_place``)."""
+        s = job.spec
+        job_id = s.job_id
+        exclude = drain if s.slice_chips <= self.cfg.pod_size else ()
+        requeued = job_id in self._requeued
+        # regrow: a degraded elastic job first tries its submitted shape
+        # (paying the reshard transfer back up on restart)
+        if requeued and s.elastic and s.chips < job.target_chips:
+            tgt = dataclasses.replace(s, chips=job.target_chips,
+                                      n_slices=job.target_slices)
+            if self._alloc_job(job_id, tgt, exclude):
+                job.spec = tgt
+                self._start_segment(job)
+                return True
+        if self._alloc_job(job_id, s, exclude):
+            self._start_segment(job)
+            if s.elastic and s.chips < job.target_chips:
+                self._degraded[job_id] = None
+            return True
+        if requeued and s.elastic:
+            # elastic resume: a preempted/failed job restarts degraded
+            # instead of waiting for the full shape (paper §3.2's
+            # utilization/stability trade; work rate scales with chips) —
+            # gangs shed slices, single-slice jobs halve.
+            if s.n_slices > 1:
+                for k in range(s.n_slices - 1, 0, -1):
+                    sub = dataclasses.replace(
+                        s, chips=s.slice_chips * k, n_slices=k)
+                    if self._alloc_job(job_id, sub, exclude):
+                        job.spec = sub
+                        self._start_segment(job)
+                        self._degraded[job_id] = None
+                        return True
+            elif 2 <= s.chips <= self.cfg.pod_size:
+                half = s.chips // 2
+                sub = dataclasses.replace(s, chips=half)
+                if self._alloc_job(job_id, sub, exclude):
+                    job.spec = sub
+                    self._start_segment(job)
+                    self._degraded[job_id] = None
+                    return True
+        # defragmentation: migrate small jobs if that frees a slice
+        if self._defrag_for(job):
+            if self._alloc_job(job_id, job.spec):
+                self._start_segment(job)
+                return True
+        # preemption for high-priority arrivals
+        if self._preempt_for(job):
+            if self._alloc_job(job_id, job.spec):
+                self._start_segment(job)
+                return True
+        return False
+
     def _try_schedule(self):
         self.queue.sort(key=lambda j: (-self._eff_priority(j),
                                        self.jobs[j].spec.arrival))
         drain = self._drain_for_xl()
+        self._refill_gangs(drain)
+        self._regrow_elastic(drain)
         scheduled = []
         for job_id in list(self.queue):
-            job = self.jobs[job_id]
-            exclude = drain if job.spec.chips <= self.cfg.pod_size else ()
-            if self.placement.alloc(self.cluster, job_id, job.spec.chips,
-                                    exclude=exclude) is not None:
+            if self._sched_one(self.jobs[job_id], drain):
                 scheduled.append(job_id)
-                self._start_segment(job)
-                continue
-            # elastic resume: a preempted/failed job restarts on half its
-            # slice instead of waiting for the full shape (paper §3.2's
-            # utilization/stability trade; work rate scales with chips).
-            if job_id in self._requeued and job.spec.elastic \
-                    and 2 <= job.spec.chips <= self.cfg.pod_size:
-                half = job.spec.chips // 2
-                if self.placement.alloc(self.cluster, job_id, half,
-                                        exclude=exclude) is not None:
-                    job.spec = dataclasses.replace(job.spec, chips=half)
-                    scheduled.append(job_id)
-                    self._start_segment(job)
-                    continue
-            # defragmentation: migrate small jobs if that frees a slice
-            if self._defrag_for(job):
-                if self.placement.alloc(self.cluster, job_id,
-                                        job.spec.chips) is not None:
-                    scheduled.append(job_id)
-                    self._start_segment(job)
-                    continue
-            # preemption for high-priority arrivals
-            if self._preempt_for(job):
-                if self.placement.alloc(self.cluster, job_id,
-                                        job.spec.chips) is not None:
-                    scheduled.append(job_id)
-                    self._start_segment(job)
         for j in scheduled:
             self.queue.remove(j)
 
@@ -321,10 +553,9 @@ class FleetSim:
             return False
         v = self.jobs[victim]
         self._stop_segment(v, lost=False)     # checkpoint-resume migration
-        self.cluster.release(victim)
+        self._release_job(victim)
         # instant re-placement elsewhere (cost charged as INIT on restart)
-        if self.placement.alloc(self.cluster, victim,
-                                v.spec.chips) is not None:
+        if self._alloc_job(victim, v.spec):
             # repeated migrations would replace with an identical spec —
             # only rebuild when init_time actually changes
             if v.spec.init_time != self.cfg.defrag_migration_cost:
@@ -344,16 +575,26 @@ class FleetSim:
         victims = self.preemption.victims_for(self, job)
         if not victims:
             return False
+        self._evict_victims(victims)
+        return True
+
+    def _evict_victims(self, victims):
+        """Shared eviction bookkeeping (both engines, both victim kinds):
+        running victims roll back to their checkpoint; a rigid gang caught
+        mid-replacement-wait closes its stall and requeues whole."""
         for j in victims:
             v = self.jobs[j]
+            if j in self._gang_wait:
+                self._evict_gang_wait(j)
+                v.preemptions += 1
+                continue
             # preemption rollback is a scheduling-layer loss, not hardware
             self._stop_segment(v, lost=True, lost_layer=Layer.SCHEDULING)
-            self.cluster.release(j)
+            self._release_job(j)
             v.preemptions += 1
             self._queued_since[j] = self.now
             self._requeued.add(j)
             self.queue.append(j)
-        return True
 
     # ---- run segments ----------------------------------------------------
     def _start_segment(self, job: JobRuntime,
@@ -381,6 +622,13 @@ class FleetSim:
             t += assembly
         init = s.effective_init()
         t += init
+        # elastic resize: restarting at a different width re-partitions the
+        # checkpointed state — the measured transfer cost (bytes moved
+        # between the old and new partition assignments over DCN)
+        reshard = 0.0
+        if job.last_chips and job.last_chips != s.chips:
+            reshard = reshard_seconds(s.arch, job.last_chips, s.chips)
+            t += reshard
 
         step_f, ckpt_f, stall_f = self._rates(s)
         # work rate in reference chip-seconds: slower generations do
@@ -398,9 +646,9 @@ class FleetSim:
         # maintenance drain, failure burst — cannot leave phantom
         # allocated chip-time beyond the kill (or the horizon)
         seg = {"t_sched": self.now, "assembly": assembly, "init": init,
-               "init_layer": init_layer, "t_run0": t, "epoch": epoch,
-               "step_f": step_f, "ckpt_f": ckpt_f, "stall_f": stall_f,
-               "gen": gen}
+               "init_layer": init_layer, "reshard": reshard, "t_run0": t,
+               "epoch": epoch, "step_f": step_f, "ckpt_f": ckpt_f,
+               "stall_f": stall_f, "gen": gen}
         self.running[s.job_id] = seg
         job.started = self.now
         if t_fail < min(end, self.cfg.horizon):
@@ -432,6 +680,13 @@ class FleetSim:
             self._emit(job, Phase.INIT, t_setup,
                        min(self.now, t_setup + seg["init"]),
                        layer=seg["init_layer"], gen=gen)
+            t_setup += seg["init"]
+        if seg["reshard"] > 0:
+            # the resize transfer runs after program bring-up (the restore
+            # read IS the re-partition), before productive steps
+            self._emit(job, Phase.RESHARD, t_setup,
+                       min(self.now, t_setup + seg["reshard"]),
+                       layer=Layer.SCHEDULING, gen=gen)
         dur = max(0.0, self.now - t0)
         step_t = dur * seg["step_f"]
         ckpt_t = dur * seg["ckpt_f"]
@@ -469,6 +724,7 @@ class FleetSim:
                        layer=Layer.DATA, gen=gen)
         job.remaining = max(0.0, job.remaining - credited)
         job.checkpointed += credited
+        job.last_chips = s.chips
 
     # ---- scenario events ---------------------------------------------------
     def _begin_maintenance(self, pod_id: int):
@@ -483,12 +739,24 @@ class FleetSim:
         self._maint_depth[pod_id] += 1
         if self._maint_depth[pod_id] > 1:      # already under maintenance
             return
-        for job_id in list(self.cluster.pod_jobs(pod_id)):
-            if job_id not in self.jobs:        # another pod's sentinel
+        seen = set()
+        for alloc_id in list(self.cluster.pod_jobs(pod_id)):
+            if alloc_id.startswith(REPAIR_TAG):
+                # the maintenance window subsumes the repair: the crew
+                # fixes the slice while the pod is down (the pending
+                # ``repair`` event then releases a missing tag, a no-op)
+                self.cluster.release(alloc_id)
                 continue
+            job_id = owner_of(alloc_id)
+            if job_id not in self.jobs or job_id in seen:
+                continue   # another pod's sentinel / other gang slice
+            seen.add(job_id)
             v = self.jobs[job_id]
+            if job_id in self._gang_wait:      # mid-replacement-wait gang
+                self._evict_gang_wait(job_id)
+                continue
             self._stop_segment(v, lost=False)  # planned: checkpoint-resume
-            self.cluster.release(job_id)
+            self._release_job(job_id)
             if v.remaining > 0:
                 self._queued_since[job_id] = self.now
                 self._requeued.add(job_id)
@@ -511,14 +779,9 @@ class FleetSim:
         for job_id in list(self.running):
             if self._burst_rng.random() >= burst.kill_frac:
                 continue
-            job = self.jobs[job_id]
-            job.failures += 1
-            self._stop_segment(job, lost=True)
-            self.cluster.release(job_id)
-            if job.remaining > 0:
-                self._queued_since[job_id] = self.now
-                self._requeued.add(job_id)
-                self.queue.append(job_id)
+            # slice-granularity kill: the burst takes one slice of a gang
+            # (the victim draw stays on the scenario's dedicated stream)
+            self._slice_failure(self.jobs[job_id], self._burst_rng)
         self._try_schedule()
 
     # ---- event loop -------------------------------------------------------
@@ -545,6 +808,11 @@ class FleetSim:
                 self._end_maintenance(int(payload))
             elif kind == "burst":
                 self._failure_burst(int(payload))
+            elif kind == "repair":
+                # failed hardware back in service (no-op when maintenance
+                # already subsumed the sentinel)
+                self.cluster.release(payload)
+                self._try_schedule()
             elif kind in ("complete", "failure"):
                 job_id, epoch = payload.rsplit(":", 1)
                 job = self.jobs[job_id]
@@ -553,25 +821,33 @@ class FleetSim:
                     continue   # stale event from a preempted segment
                 if kind == "complete":
                     self._stop_segment(job, lost=False)
-                    self.cluster.release(job_id)
+                    self._release_job(job_id)
                 else:
-                    job.failures += 1
-                    self._stop_segment(job, lost=True)
-                    self.cluster.release(job_id)
-                    if job.remaining > 0:
-                        self._queued_since[job_id] = t
-                        self._requeued.add(job_id)
-                        self.queue.append(job_id)
+                    # MTBF failure: slice-granularity (the victim-slice
+                    # draw rides the base failure stream)
+                    self._slice_failure(job, self.rng)
                 self._try_schedule()
         # close still-running segments at the horizon
         self.now = cfg.horizon
         for job_id in list(self.running):
             self._stop_segment(self.jobs[job_id], lost=False)
-            self.cluster.release(job_id)
+            self._release_job(job_id)
+        # rigid gangs still holding survivors book the stall to the end
+        for job_id in list(self._gang_wait):
+            w = self._gang_wait.pop(job_id)
+            job = self.jobs[job_id]
+            s = job.spec
+            self._emit(job, Phase.IDLE, w["t0"], cfg.horizon,
+                       layer=Layer.HARDWARE, chips=s.chips - s.slice_chips)
+            self._release_job(job_id)
         return self
 
     def _sample(self, t: float):
         occupied = sum(self.jobs[j].spec.chips for j in self.running)
+        # rigid gangs waiting on a replacement slice still hold survivors
+        occupied += sum(
+            self.jobs[j].spec.chips - self.jobs[j].spec.slice_chips
+            for j in self._gang_wait)
         self.telemetry.append({
             "t": t,
             "occupied": occupied,

@@ -41,7 +41,7 @@ from typing import Dict, List, Optional
 from repro.core.goodput import Interval, Phase
 from repro.core.ledger import GoodputLedger
 
-TRACE_VERSION = 1
+TRACE_VERSION = 2
 GOLDEN_DIR = pathlib.Path(__file__).resolve().parents[3] / "tests" / "golden"
 
 _JSON = dict(sort_keys=True, separators=(",", ":"))
@@ -185,6 +185,7 @@ def record(sim, meta: Optional[Dict[str, object]] = None) -> Trace:
         "scenario": cfg.scenario.name if cfg.scenario else None,
         "placement": sim.placement.name, "preemption": sim.preemption.name,
         "defrag": sim.defrag.name,
+        "slice_repair_s": cfg.slice_repair_s,
     }
     # workload provenance (set by scenarios.build_sim): with it, a trace
     # alone rebuilds the exact sim — the advisor's counterfactual entry

@@ -44,7 +44,6 @@ what keeps the golden traces byte-identical.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.goodput import Layer, Phase
@@ -244,7 +243,8 @@ class VectorizedFleetSim(FleetSim):
 
     # ---- columnar interval emission --------------------------------------
     def _emit(self, job: JobRuntime, phase: Phase, t0: float, t1: float,
-              layer: Layer, gen: Optional[Tuple[str, float]] = None):
+              layer: Layer, gen: Optional[Tuple[str, float]] = None,
+              chips: Optional[int] = None):
         if t1 <= t0:
             return
         s = job.spec
@@ -280,7 +280,7 @@ class VectorizedFleetSim(FleetSim):
         self._bp.append(phase)
         self._b0.append(t0)
         self._b1.append(t1)
-        self._bc.append(s.chips)
+        self._bc.append(s.chips if chips is None else chips)
         self._bg.append(pg)
         self._bs.append(seg)
         if len(self._b0) >= _FLUSH_EVERY:
@@ -399,6 +399,10 @@ class VectorizedFleetSim(FleetSim):
             self._fail_need = need
         return a
 
+    def _place(self, alloc_id: str, chips: int, exclude: tuple = ()):
+        # every slice placement (gang or single) rides the failure memo
+        return self._fast_alloc(alloc_id, chips, exclude)
+
     def _preempt_for(self, job: JobRuntime) -> bool:
         pre = self.preemption
         tp = type(pre)
@@ -424,14 +428,7 @@ class VectorizedFleetSim(FleetSim):
         if not victims:
             fails.append((chips, eff))
             return False
-        for j in victims:
-            v = self.jobs[j]
-            self._stop_segment(v, lost=True, lost_layer=Layer.SCHEDULING)
-            self.cluster.release(j)
-            v.preemptions += 1
-            self._queued_since[j] = self.now
-            self._requeued.add(j)
-            self.queue.append(j)
+        self._evict_victims(victims)
         return True
 
     def _try_schedule(self):
@@ -454,32 +451,12 @@ class VectorizedFleetSim(FleetSim):
             # the drain-exclusion memo is only valid against one drain set
             self._memo_drain = drain
             self._fail_min_dr = _NO_FAIL
-        pod_size = self.cfg.pod_size
+        self._refill_gangs(drain)
+        self._regrow_elastic(drain)
         scheduled = []
         for job_id in list(self.queue):
-            job = jobs[job_id]
-            exclude = drain if job.spec.chips <= pod_size else ()
-            if self._fast_alloc(job_id, job.spec.chips, exclude) is not None:
+            if self._sched_one(jobs[job_id], drain):
                 scheduled.append(job_id)
-                self._start_segment(job)
-                continue
-            if job_id in self._requeued and job.spec.elastic \
-                    and 2 <= job.spec.chips <= pod_size:
-                half = job.spec.chips // 2
-                if self._fast_alloc(job_id, half, exclude) is not None:
-                    job.spec = dataclasses.replace(job.spec, chips=half)
-                    scheduled.append(job_id)
-                    self._start_segment(job)
-                    continue
-            if self._defrag_for(job):
-                if self._fast_alloc(job_id, job.spec.chips, ()) is not None:
-                    scheduled.append(job_id)
-                    self._start_segment(job)
-                    continue
-            if self._preempt_for(job):
-                if self._fast_alloc(job_id, job.spec.chips, ()) is not None:
-                    scheduled.append(job_id)
-                    self._start_segment(job)
         if scheduled:
             # remove each scheduled id's first occurrence in one pass
             # (reference does repeated queue.remove — same result)

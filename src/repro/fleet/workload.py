@@ -146,6 +146,11 @@ def generate_jobs(n_jobs: int, horizon: float, seed: int = 0,
             data_stall_frac=rng.uniform(0.01, 0.08),
             pg=pg_table.get(arch, rng.uniform(0.25, 0.6)),
             elastic=(phase == "train" and sc in ("medium", "large")),
+            # mid-size training jobs run as 2-slice gangs (multi-slice over
+            # DCN): a slice failure degrades/refills instead of killing the
+            # job.  Deterministic rule — no rng draw, so the stream stays
+            # byte-identical to pre-gang workloads.
+            n_slices=2 if (phase == "train" and 32 <= chips <= 256) else 1,
             arrival=rng.uniform(0, 0.8 * horizon),
         ))
     if arrival_profile is not None:

@@ -1,0 +1,210 @@
+"""Elastic-reshard cost model: bytes moved between partition assignments.
+
+When an elastic job resizes (a gang slice dies, or a degraded job regrows
+to its submitted width), its checkpointed state must be re-partitioned:
+every chip has to fetch the part of its *new* shard it does not already
+hold.  This module prices that movement from the same logical-axis ->
+mesh-axis rule walk ``repro.parallel.sharding`` uses to place parameters
+(``assign_axes`` below is that walk, extracted so the fleet simulator can
+run it without jax), over the real per-architecture parameter inventories
+(shapes + logical axes + dtype sizes from ``repro.models.init.spec_tree``).
+
+The module is deliberately jax-free: the fleet engines and the numpy-only
+CI smokes price resharding from the committed ``param_inventory.json``
+(regenerate with ``python -m repro.parallel.reshard --refresh-inventory``,
+which needs jax; a tier-1 test pins the committed file against a fresh
+derivation so it cannot rot).
+
+Cost model (documented, deliberately simple):
+  * canonical mesh for a slice of C chips: model = min(8, largest power
+    of two dividing C), data = C / model — the TP-within-FSDP default
+    the launcher uses;
+  * a leaf replicated under the *old* mesh is free to reshard (every
+    chip already holds all of it);
+  * any other leaf costs its full new per-chip shard: the chip gathers
+    its new shard from peers / the checkpoint over DCN;
+  * optimizer state travels with the parameters
+    (``OPT_STATE_FACTOR`` = params + Adam m + v);
+  * transfers run chip-parallel over per-chip DCN bandwidth
+    (``repro.core.hardware.DCN_BW_PER_CHIP``).
+"""
+from __future__ import annotations
+
+import functools
+import json
+import math
+import pathlib
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.hardware import DCN_BW_PER_CHIP
+
+# logical axis -> candidate mesh axes (first that divides wins; () =
+# replicate).  This is THE rule table — repro.parallel.sharding re-exports
+# it and builds jax PartitionSpecs from the same walk.
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    "vocab": ("model",),
+    "embed": ("data",),          # FSDP/ZeRO: weights gathered per-layer
+    "ffn": ("model",),           # TP
+    "heads": ("model",),
+    "kv": ("model",),
+    "experts": ("model",),       # EP when num_experts % model == 0
+    "experts_r": (),             # router output dim: tiny, replicate
+    "rnn": ("model",),
+    "rnn_in": ("data",),
+    "pos": (),
+    "layers": (),
+    "vec": (),
+    "embed_v": (),
+    "vec2": (),
+}
+
+# params + Adam first/second moments move together on a resize
+OPT_STATE_FACTOR = 3.0
+
+_INVENTORY_PATH = pathlib.Path(__file__).parent / "param_inventory.json"
+
+
+def assign_axes(shape: Sequence[int], axes: Sequence[str],
+                mesh_axes: Dict[str, int],
+                rules: Optional[Dict[str, Tuple[str, ...]]] = None
+                ) -> Tuple[Optional[str], ...]:
+    """Per-dim mesh-axis assignment for one parameter: the first rule
+    candidate present in the mesh, not already used by another dim, and
+    dividing the dim evenly wins; otherwise the dim replicates.
+
+    ``mesh_axes`` maps mesh axis name -> size (insertion order is the
+    mesh's axis order).  This is the exact walk
+    ``sharding.spec_to_pspec`` wraps in a jax ``PartitionSpec``.
+    """
+    rules = rules or DEFAULT_RULES
+    parts: List[Optional[str]] = []
+    used = set()
+    for dim, logical in zip(shape, axes):
+        choice = None
+        for cand in rules.get(logical, ()):
+            size = mesh_axes.get(cand, 1)
+            if cand in mesh_axes and cand not in used \
+                    and dim % size == 0 and size > 1:
+                choice = cand
+                break
+        if choice:
+            used.add(choice)
+        parts.append(choice)
+    return tuple(parts)
+
+
+def canonical_mesh(chips: int) -> Dict[str, int]:
+    """The launcher's default TP-within-FSDP mesh for a slice of
+    ``chips``: model = min(8, largest power of two dividing chips)."""
+    if chips < 1:
+        raise ValueError(f"chips must be >= 1, got {chips}")
+    pow2 = chips & -chips                   # largest power of 2 dividing
+    model = min(8, pow2)
+    return {"data": chips // model, "model": model}
+
+
+# ---------------------------------------------------------------------------
+# parameter inventories (shapes + logical axes + dtype sizes per arch)
+# ---------------------------------------------------------------------------
+
+def _live_inventory(arch: str) -> List[Tuple[Tuple[int, ...],
+                                             Tuple[str, ...], int]]:
+    """Derive the inventory from the model registry (requires jax)."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models.init import ParamSpec, spec_tree
+
+    leaves = jax.tree.leaves(spec_tree(get_config(arch)),
+                             is_leaf=lambda x: isinstance(x, ParamSpec))
+    return [(tuple(s.shape), tuple(s.axes),
+             jax.dtypes.canonicalize_dtype(s.dtype).itemsize)
+            for s in leaves]
+
+
+@functools.lru_cache(maxsize=None)
+def param_inventory(arch: str) -> List[Tuple[Tuple[int, ...],
+                                             Tuple[str, ...], int]]:
+    """(shape, logical axes, dtype itemsize) per parameter leaf, from the
+    committed JSON when present (jax-free path), else derived live."""
+    if _INVENTORY_PATH.exists():
+        table = json.loads(_INVENTORY_PATH.read_text())
+        if arch in table:
+            return [(tuple(shape), tuple(axes), itemsize)
+                    for shape, axes, itemsize in table[arch]]
+    return _live_inventory(arch)
+
+
+# ---------------------------------------------------------------------------
+# the cost itself
+# ---------------------------------------------------------------------------
+
+def _shard_bytes_per_chip(shape, itemsize, parts, mesh: Dict[str, int]
+                          ) -> float:
+    elems = math.prod(shape)
+    for dim, part in zip(shape, parts):
+        if part:
+            elems //= mesh[part]
+    return float(elems * itemsize)
+
+
+@functools.lru_cache(maxsize=None)
+def reshard_bytes_per_chip(arch: str, old_chips: int, new_chips: int
+                           ) -> float:
+    """Inbound bytes per chip to re-partition ``arch`` parameters from a
+    slice of ``old_chips`` to one of ``new_chips`` (optimizer state
+    included)."""
+    old_mesh = canonical_mesh(old_chips)
+    new_mesh = canonical_mesh(new_chips)
+    inbound = 0.0
+    for shape, axes, itemsize in param_inventory(arch):
+        old_parts = assign_axes(shape, axes, old_mesh)
+        if not any(old_parts):
+            continue                 # replicated before: already on-chip
+        new_parts = assign_axes(shape, axes, new_mesh)
+        inbound += _shard_bytes_per_chip(shape, itemsize, new_parts,
+                                         new_mesh)
+    return inbound * OPT_STATE_FACTOR
+
+
+def reshard_seconds(arch: str, old_chips: int, new_chips: int,
+                    bw: float = DCN_BW_PER_CHIP) -> float:
+    """Wall seconds the resize transfer takes (chip-parallel over DCN)."""
+    if old_chips == new_chips:
+        return 0.0
+    return reshard_bytes_per_chip(arch, old_chips, new_chips) / bw
+
+
+# ---------------------------------------------------------------------------
+# inventory refresh CLI (requires jax + the model registry)
+# ---------------------------------------------------------------------------
+
+def refresh_inventory(path: pathlib.Path = _INVENTORY_PATH) -> dict:
+    from repro.configs import ARCH_IDS
+
+    table = {arch: [[list(shape), list(axes), itemsize]
+                    for shape, axes, itemsize in _live_inventory(arch)]
+             for arch in ARCH_IDS}
+    path.write_text(json.dumps(table, indent=1, sort_keys=True) + "\n")
+    return table
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--refresh-inventory", action="store_true",
+                    help="rederive param_inventory.json from the model "
+                         "registry (requires jax)")
+    args = ap.parse_args()
+    if args.refresh_inventory:
+        table = refresh_inventory()
+        print(f"wrote {_INVENTORY_PATH} "
+              f"({len(table)} archs, "
+              f"{sum(len(v) for v in table.values())} leaves)")
+    else:
+        for arch in sorted(json.loads(_INVENTORY_PATH.read_text())
+                           if _INVENTORY_PATH.exists() else []):
+            print(f"{arch}: 64->32 chips "
+                  f"{reshard_seconds(arch, 64, 32):.3f}s, "
+                  f"32->64 chips {reshard_seconds(arch, 32, 64):.3f}s")

@@ -19,26 +19,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.config import ModelConfig
 from repro.models.init import ParamSpec, spec_tree
+# the rule table and walk live in repro.parallel.reshard (jax-free) so the
+# fleet simulator can price elastic resizes from the identical assignment;
+# DEFAULT_RULES is re-exported here for compatibility
+from repro.parallel.reshard import DEFAULT_RULES, assign_axes  # noqa: F401
 
 PyTree = Any
-
-# logical axis -> candidate mesh axes (first that divides wins; () = replicate)
-DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
-    "vocab": ("model",),
-    "embed": ("data",),          # FSDP/ZeRO: weights gathered per-layer
-    "ffn": ("model",),           # TP
-    "heads": ("model",),
-    "kv": ("model",),
-    "experts": ("model",),       # EP when num_experts % model == 0
-    "experts_r": (),             # router output dim: tiny, replicate
-    "rnn": ("model",),
-    "rnn_in": ("data",),
-    "pos": (),
-    "layers": (),
-    "vec": (),
-    "embed_v": (),
-    "vec2": (),
-}
 
 
 def axis_size(mesh: Mesh, name: str) -> int:
@@ -47,21 +33,8 @@ def axis_size(mesh: Mesh, name: str) -> int:
 
 def spec_to_pspec(spec: ParamSpec, mesh: Mesh,
                   rules: Optional[Dict[str, Tuple[str, ...]]] = None) -> P:
-    rules = rules or DEFAULT_RULES
-    parts = []
-    used = set()
-    for dim, logical in zip(spec.shape, spec.axes):
-        choice = None
-        for cand in rules.get(logical, ()):
-            if cand in mesh.axis_names and cand not in used \
-                    and dim % axis_size(mesh, cand) == 0 \
-                    and axis_size(mesh, cand) > 1:
-                choice = cand
-                break
-        if choice:
-            used.add(choice)
-        parts.append(choice)
-    return P(*parts)
+    mesh_axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return P(*assign_axes(spec.shape, spec.axes, mesh_axes, rules))
 
 
 def param_shardings(cfg: ModelConfig, mesh: Mesh,

@@ -9,7 +9,15 @@ background thread.  The manager implements:
   * async mode: device->host snapshot on the caller thread (the only
     device pause), disk serialization on a worker thread;
   * keep-last-k GC, never deleting the newest committed step;
-  * restore() returns (state, step) from the newest committed manifest.
+  * restore() returns (state, step) from the newest *readable* committed
+    manifest — a corrupted or truncated manifest (or a torn array file
+    behind a committed-looking directory) is skipped, falling back to the
+    previous committed step instead of raising;
+  * start_restore()/finish_restore(): the disk read streams on a worker
+    thread so restore overlaps program setup (compile + param init);
+  * an optional :class:`FaultInjector` crashes at named protocol points,
+    letting tests prove a kill mid-write or mid-restore never surfaces a
+    torn checkpoint.
 
 Storage layout:  <dir>/step_<n>/arr_<i>.npy + manifest.json (committed last).
 """
@@ -18,10 +26,9 @@ from __future__ import annotations
 import json
 import pathlib
 import shutil
-import threading
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -29,13 +36,46 @@ import numpy as np
 PyTree = Any
 
 
+class SimulatedCrash(RuntimeError):
+    """Raised by a FaultInjector at its configured protocol point."""
+
+
+class FaultInjector:
+    """Deterministic kill switch for checkpoint fault-injection tests.
+
+    ``crash_at`` names a protocol point (``"after_arrays"`` — arrays on
+    disk, manifest not yet written; ``"before_commit"`` — manifest in the
+    tmp dir, rename pending; ``"mid_restore"`` — manifest parsed, array
+    reads pending) and ``skip`` lets the first N hits through, so "kill
+    the K-th checkpoint write" is expressible."""
+
+    POINTS = ("after_arrays", "before_commit", "mid_restore")
+
+    def __init__(self, crash_at: str, skip: int = 0):
+        if crash_at not in self.POINTS:
+            raise ValueError(f"unknown crash point {crash_at!r}; "
+                             f"choose from {self.POINTS}")
+        self.crash_at = crash_at
+        self.skip = skip
+        self.hits = 0
+
+    def __call__(self, point: str) -> None:
+        if point != self.crash_at:
+            return
+        self.hits += 1
+        if self.hits > self.skip:
+            raise SimulatedCrash(f"injected crash at {point}")
+
+
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3,
-                 async_mode: bool = False):
+                 async_mode: bool = False,
+                 fault_injector: Optional[Callable[[str], None]] = None):
         self.dir = pathlib.Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
         self.async_mode = async_mode
+        self._fault = fault_injector or (lambda point: None)
         self._pool = ThreadPoolExecutor(max_workers=1) if async_mode else None
         self._pending: Optional[Future] = None
         self.metrics: Dict[str, float] = {
@@ -73,9 +113,11 @@ class CheckpointManager:
         tmp.mkdir(parents=True)
         for i, arr in enumerate(host):
             np.save(tmp / f"arr_{i:05d}.npy", arr, allow_pickle=False)
+        self._fault("after_arrays")
         manifest = {"step": step, "n_arrays": len(host),
                     "time": time.time()}
         (tmp / "manifest.json").write_text(json.dumps(manifest))
+        self._fault("before_commit")
         if final.exists():
             shutil.rmtree(final)
         tmp.rename(final)                           # atomic commit
@@ -90,22 +132,75 @@ class CheckpointManager:
                 steps.append(int(p.name.split("_")[1]))
         return sorted(steps)
 
-    def restore(self, example_state: PyTree) -> Tuple[Optional[PyTree], int]:
-        """Load the newest committed checkpoint into example_state's
-        structure; returns (state, step) or (None, -1)."""
-        steps = self.committed_steps()
-        if not steps:
-            return None, -1
-        step = steps[-1]
+    def _read_step(self, step: int) -> Optional[Tuple[List[np.ndarray], int]]:
+        """Host arrays of one committed step, or None when the manifest
+        (or an array behind it) is corrupt/truncated — a torn checkpoint
+        must fall back, never raise."""
         d = self.dir / f"step_{step:010d}"
-        manifest = json.loads((d / "manifest.json").read_text())
+        try:
+            manifest = json.loads((d / "manifest.json").read_text())
+            self._fault("mid_restore")
+            loaded = [np.load(d / f"arr_{i:05d}.npy", allow_pickle=False)
+                      for i in range(int(manifest["n_arrays"]))]
+        except SimulatedCrash:
+            raise                        # the injected kill, not corruption
+        except (OSError, ValueError, KeyError, TypeError):
+            return None
+        return loaded, step
+
+    def _read_newest(self) -> Optional[Tuple[List[np.ndarray], int]]:
+        for step in reversed(self.committed_steps()):
+            got = self._read_step(step)
+            if got is not None:
+                return got
+        return None
+
+    @staticmethod
+    def _assemble(got: Optional[Tuple[List[np.ndarray], int]],
+                  example_state: PyTree) -> Tuple[Optional[PyTree], int]:
+        if got is None:
+            return None, -1
+        loaded, step = got
         leaves, treedef = jax.tree.flatten(example_state)
-        assert manifest["n_arrays"] == len(leaves), "state layout changed"
-        loaded = [np.load(d / f"arr_{i:05d}.npy")
-                  for i in range(len(leaves))]
+        assert len(loaded) == len(leaves), "state layout changed"
         restored = [jax.numpy.asarray(a, dtype=l.dtype) if hasattr(l, "dtype")
                     else a for a, l in zip(loaded, leaves)]
         return jax.tree.unflatten(treedef, restored), step
+
+    def restore(self, example_state: PyTree) -> Tuple[Optional[PyTree], int]:
+        """Load the newest readable committed checkpoint into
+        example_state's structure; returns (state, step) or (None, -1)."""
+        return self._assemble(self._read_newest(), example_state)
+
+    # -- streaming restore (overlaps program setup) --------------------
+    def start_restore(self) -> Future:
+        """Begin reading the newest committed checkpoint from storage on
+        a worker thread; the caller overlaps compile/param-init and joins
+        via :meth:`finish_restore`."""
+        pool = ThreadPoolExecutor(max_workers=1)
+        fut = pool.submit(self._timed_read)
+        pool.shutdown(wait=False)
+        return fut
+
+    def _timed_read(self):
+        t0 = time.monotonic()
+        got = self._read_newest()
+        return got, time.monotonic() - t0
+
+    def finish_restore(self, fut: Future, example_state: PyTree
+                       ) -> Tuple[Optional[PyTree], int, Dict[str, float]]:
+        """Join a :meth:`start_restore` read and assemble the state.
+
+        The stats dict carries the overlap accounting: ``read_s`` is the
+        full storage-read time, ``exposed_s`` how long this join actually
+        blocked, ``overlap_s`` the read time hidden behind setup work —
+        the measured INIT reduction of the async restore."""
+        t0 = time.monotonic()
+        got, read_s = fut.result()
+        exposed = time.monotonic() - t0
+        state, step = self._assemble(got, example_state)
+        return state, step, {"read_s": read_s, "exposed_s": exposed,
+                             "overlap_s": max(0.0, read_s - exposed)}
 
     def _gc(self) -> None:
         steps = self.committed_steps()

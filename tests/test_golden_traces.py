@@ -83,7 +83,7 @@ def test_trace_roundtrip_and_version_gate(tmp_path):
     assert Trace.loads(text).dumps() == text
     p = trace.dump(tmp_path / "t.jsonl")
     assert Trace.load(p).dumps() == text
-    bumped = text.replace('"version":1', '"version":99', 1)
+    bumped = text.replace('"version":2', '"version":99', 1)
     with pytest.raises(ValueError, match="version"):
         Trace.loads(bumped)
 

@@ -1,0 +1,304 @@
+"""Resiliency semantics: elastic resume, multi-slice gang jobs, reshard
+accounting, and rigid gang replacement — pinned identically on both
+engines.
+
+The elastic-resume pinning tests were written against the pre-gang
+engines (the half-slice restart path in ``fleet/sim.py``) and must keep
+passing through the multi-slice refactor: an elastic single-slice job
+preempted out of a full cluster restarts on half its slice instead of
+waiting for the full shape.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core.goodput import LOSS_BUCKETS, Layer, Phase
+from repro.fleet.job import JobSpec
+from repro.fleet.scenarios import (GOLDEN_KNOBS, GOLDEN_SIZE_MIX, SCENARIOS,
+                                   FailureBurst, Scenario, build_sim)
+from repro.fleet.sim import FleetSim, SimConfig
+from repro.parallel.reshard import reshard_seconds
+
+ENGINES = ("reference", "vectorized")
+
+NO_FAILURES = 1e15          # chip_mtbf high enough that no segment fails
+
+
+def _elastic_preempt_sim(engine, **kw):
+    """One pod of 8; an elastic 8-chip job is preempted by a priority-5
+    arrival and can only get half its slice back."""
+    cfg = SimConfig(n_pods=1, pod_size=8, horizon=40_000.0, seed=0,
+                    chip_mtbf=NO_FAILURES, engine=engine, **kw)
+    sim = FleetSim(cfg)
+    sim.submit(JobSpec("low", chips=8, work=8 * 30_000.0, priority=1,
+                       elastic=True, arrival=0.0))
+    sim.submit(JobSpec("high", chips=4, work=4 * 1e9, priority=5,
+                       arrival=1_000.0))
+    # a later arrival triggers the scheduling pass that restarts "low"
+    sim.submit(JobSpec("late", chips=4, work=4 * 1e9, priority=1,
+                       arrival=2_000.0))
+    sim.run()
+    return sim
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_elastic_resume_restarts_on_half_slice(engine):
+    sim = _elastic_preempt_sim(engine)
+    low = sim.jobs["low"]
+    assert low.preemptions == 1
+    # the pinned behaviour: preempted elastic job degraded to half width
+    assert low.spec.chips == 4
+    # its requeued wait is PARTIAL (restart gap), not initial QUEUED
+    partial = [i for i in sim.intervals
+               if i.job_id == "low" and i.phase is Phase.PARTIAL]
+    assert partial, "requeued elastic job must book a PARTIAL wait"
+    # every post-restart interval runs on the degraded slice
+    t_restart = max(i.t0 for i in partial)
+    after = [i for i in sim.intervals
+             if i.job_id == "low" and i.phase is Phase.STEP
+             and i.t0 >= t_restart]
+    assert after and all(i.chips == 4 for i in after)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_elastic_resume_conserves_work(engine):
+    sim = _elastic_preempt_sim(engine)
+    for job in sim.jobs.values():
+        assert job.checkpointed <= job.spec.work + 1e-6
+
+
+def test_elastic_resume_identical_across_engines():
+    ref = _elastic_preempt_sim("reference")
+    vec = _elastic_preempt_sim("vectorized")
+    assert ref.ledger.totals() == vec.ledger.totals()
+    for j in ref.jobs:
+        assert ref.jobs[j].spec == vec.jobs[j].spec
+        assert ref.jobs[j].preemptions == vec.jobs[j].preemptions
+
+
+def test_inelastic_job_waits_instead_of_degrading():
+    """Same setup, elastic off: the preempted job never halves."""
+    cfg = SimConfig(n_pods=1, pod_size=8, horizon=40_000.0, seed=0,
+                    chip_mtbf=NO_FAILURES, engine="reference")
+    sim = FleetSim(cfg)
+    sim.submit(JobSpec("low", chips=8, work=8 * 30_000.0, priority=1,
+                       elastic=False, arrival=0.0))
+    sim.submit(JobSpec("high", chips=4, work=4 * 1e9, priority=5,
+                       arrival=1_000.0))
+    sim.submit(JobSpec("late", chips=4, work=4 * 1e9, priority=1,
+                       arrival=2_000.0))
+    sim.run()
+    assert sim.jobs["low"].spec.chips == 8
+
+
+# ---------------------------------------------------------------------------
+# multi-slice gangs: slice-granularity failures
+# ---------------------------------------------------------------------------
+
+def _one_burst(at_frac: float = 0.5) -> Scenario:
+    """A correlated shock that kills (one slice of) every running job."""
+    return Scenario("kill_all",
+                    bursts=(FailureBurst(at_frac=at_frac, kill_frac=1.0),))
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_elastic_gang_degrades_in_place(engine):
+    """A slice failure on an elastic 2-slice gang sheds the dead slice and
+    restarts on the survivor immediately — one RESHARD transfer, no
+    requeue."""
+    cfg = SimConfig(n_pods=1, pod_size=8, horizon=40_000.0, seed=0,
+                    chip_mtbf=NO_FAILURES, engine=engine,
+                    scenario=_one_burst())
+    sim = FleetSim(cfg)
+    sim.submit(JobSpec("gang", chips=8, n_slices=2, work=8 * 1e9,
+                       elastic=True, arrival=0.0))
+    sim.run()
+    gang = sim.jobs["gang"]
+    assert gang.failures == 1
+    assert gang.preemptions == 0           # degraded in place, not requeued
+    assert gang.spec.chips == 4 and gang.spec.n_slices == 1
+    reshard = [i for i in sim.intervals if i.phase is Phase.RESHARD]
+    assert len(reshard) == 1
+    expected = reshard_seconds("smollm-135m", 8, 4)
+    assert expected > 0
+    assert reshard[0].t1 - reshard[0].t0 == pytest.approx(expected)
+    assert Layer(reshard[0].segment["layer"]) is Layer.SCHEDULING
+    assert LOSS_BUCKETS[(Phase.RESHARD, Layer.SCHEDULING)] == \
+        "reshard_transfer"
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_elastic_gang_regrows_to_target(engine):
+    """Degraded once, killed again: the requeued elastic job regrows to
+    its submitted gang shape, paying the reshard back up."""
+    cfg = SimConfig(n_pods=1, pod_size=8, horizon=60_000.0, seed=0,
+                    chip_mtbf=NO_FAILURES, engine=engine,
+                    scenario=Scenario("two_kills", bursts=(
+                        FailureBurst(at_frac=0.3, kill_frac=1.0),
+                        FailureBurst(at_frac=0.6, kill_frac=1.0))))
+    sim = FleetSim(cfg)
+    sim.submit(JobSpec("gang", chips=8, n_slices=2, work=8 * 1e9,
+                       elastic=True, arrival=0.0))
+    sim.run()
+    gang = sim.jobs["gang"]
+    assert gang.failures == 2
+    # burst 1 degraded 8->4; burst 2 killed the lone slice and the regrow
+    # path restored the submitted 2x4 shape on the empty pod
+    assert gang.spec.chips == 8 and gang.spec.n_slices == 2
+    reshard = sorted((i.t0, i.t1 - i.t0) for i in sim.intervals
+                     if i.phase is Phase.RESHARD)
+    assert len(reshard) == 2
+    assert reshard[0][1] == pytest.approx(reshard_seconds("smollm-135m", 8, 4))
+    assert reshard[1][1] == pytest.approx(reshard_seconds("smollm-135m", 4, 8))
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_rigid_gang_books_gang_stall(engine):
+    """A rigid gang whose replacement slice is crowded out holds its
+    survivors: the hold books as hardware-layer IDLE (gang_stall) on the
+    surviving width, and the job neither degrades nor dies."""
+    cfg = SimConfig(n_pods=3, pod_size=64, horizon=40_000.0, seed=0,
+                    chip_mtbf=NO_FAILURES, engine=engine,
+                    scenario=_one_burst())
+    sim = FleetSim(cfg)
+    # rigid 2x64 gang: too wide for drain-migration, protected by priority
+    sim.submit(JobSpec("gang", chips=128, n_slices=2, work=128 * 1e9,
+                       elastic=False, priority=5, arrival=0.0))
+    # queued multi-pod job that grabs the freed pods the instant the
+    # burst kills a gang slice, starving the replacement
+    sim.submit(JobSpec("xl", chips=128, work=128 * 1e9, priority=1,
+                       arrival=1_000.0))
+    sim.run()
+    gang = sim.jobs["gang"]
+    assert gang.failures == 1
+    assert gang.spec.chips == 128 and gang.spec.n_slices == 2  # never shrank
+    stall = [i for i in sim.intervals
+             if i.job_id == "gang" and i.phase is Phase.IDLE]
+    assert len(stall) == 1
+    assert stall[0].chips == 64            # the surviving slice, not 128
+    assert stall[0].t0 == pytest.approx(20_000.0)  # the burst instant
+    assert stall[0].t1 == pytest.approx(40_000.0)  # held to the horizon
+    assert Layer(stall[0].segment["layer"]) is Layer.HARDWARE
+    assert LOSS_BUCKETS[(Phase.IDLE, Layer.HARDWARE)] == "gang_stall"
+    # the xl job did take over the two freed pods
+    xl_steps = [i for i in sim.intervals
+                if i.job_id == "xl" and i.phase is Phase.STEP]
+    assert xl_steps and all(i.t0 >= 20_000.0 for i in xl_steps)
+
+
+def _storm_totals(engine, elastic, slice_repair_s=0.0):
+    sim = build_sim(SCENARIOS["failure_storm"], size_mix=GOLDEN_SIZE_MIX,
+                    engine=engine, slice_repair_s=slice_repair_s,
+                    job_mutator=lambda j: dataclasses.replace(
+                        j, elastic=elastic),
+                    **GOLDEN_KNOBS)
+    sim.run()
+    return sim.ledger.totals()
+
+
+@pytest.mark.parametrize("elastic", (False, True))
+def test_failure_storm_identical_across_engines(elastic):
+    """Slice failures + (rigid|elastic) gang handling are bit-identical
+    across engines on the storm preset."""
+    assert _storm_totals("reference", elastic) == \
+        _storm_totals("vectorized", elastic)
+
+
+# ---------------------------------------------------------------------------
+# repair windows: failed hardware leaves service for slice_repair_s
+# ---------------------------------------------------------------------------
+
+def test_slice_repair_s_validated():
+    with pytest.raises(ValueError, match="slice_repair_s"):
+        SimConfig(slice_repair_s=-1.0)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_repair_window_stalls_rigid_gang_exactly(engine):
+    """On a full pod there is no spare capacity: a rigid gang's
+    replacement slice only exists once the dead slice's chips come back
+    from repair — the gang_stall duration IS the repair window."""
+    cfg = SimConfig(n_pods=1, pod_size=8, horizon=40_000.0, seed=0,
+                    chip_mtbf=NO_FAILURES, engine=engine,
+                    slice_repair_s=3_600.0, scenario=_one_burst())
+    sim = FleetSim(cfg)
+    sim.submit(JobSpec("gang", chips=8, n_slices=2, work=8 * 1e9,
+                       elastic=False, arrival=0.0))
+    sim.run()
+    gang = sim.jobs["gang"]
+    assert gang.failures == 1
+    assert gang.spec.chips == 8 and gang.spec.n_slices == 2
+    stall = [i for i in sim.intervals
+             if i.job_id == "gang" and i.phase is Phase.IDLE]
+    assert len(stall) == 1
+    assert stall[0].t0 == pytest.approx(20_000.0)          # the burst
+    assert stall[0].t1 == pytest.approx(23_600.0)          # repair done
+    assert LOSS_BUCKETS[(Phase.IDLE, Layer.HARDWARE)] == "gang_stall"
+    # full-width STEPs resume after the refill
+    after = [i for i in sim.intervals
+             if i.job_id == "gang" and i.phase is Phase.STEP
+             and i.t0 >= 23_600.0]
+    assert after and all(i.chips == 8 for i in after)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_repair_window_elastic_regrows_when_repair_completes(engine):
+    """The elastic counterpart: degrade on the survivors through the
+    repair window, then opportunistically regrow to the submitted shape
+    the moment the chips return — paying the reshard both ways."""
+    cfg = SimConfig(n_pods=1, pod_size=8, horizon=40_000.0, seed=0,
+                    chip_mtbf=NO_FAILURES, engine=engine,
+                    slice_repair_s=3_600.0, scenario=_one_burst())
+    sim = FleetSim(cfg)
+    sim.submit(JobSpec("gang", chips=8, n_slices=2, work=8 * 1e9,
+                       elastic=True, arrival=0.0))
+    sim.run()
+    gang = sim.jobs["gang"]
+    assert gang.failures == 1
+    assert gang.preemptions == 0
+    assert gang.spec.chips == 8 and gang.spec.n_slices == 2
+    reshard = sorted((i.t0, i.t1 - i.t0) for i in sim.intervals
+                     if i.phase is Phase.RESHARD)
+    assert len(reshard) == 2                   # 8->4 down, 4->8 back up
+    assert reshard[0][1] == pytest.approx(reshard_seconds("smollm-135m", 8, 4))
+    assert reshard[1][1] == pytest.approx(reshard_seconds("smollm-135m", 4, 8))
+    # degraded STEPs span the repair window; full width resumes after
+    degraded = [i for i in sim.intervals
+                if i.job_id == "gang" and i.phase is Phase.STEP
+                and i.chips == 4]
+    assert degraded and all(20_000.0 <= i.t0 <= 23_600.0 + 1e-6
+                            for i in degraded)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_repair_window_elastic_beats_rigid(engine):
+    """The resiliency headline at test scale: with a repair window, the
+    elastic gang out-produces the rigid one on the same hardware."""
+    def mpg(elastic):
+        cfg = SimConfig(n_pods=1, pod_size=8, horizon=40_000.0, seed=0,
+                        chip_mtbf=NO_FAILURES, engine=engine,
+                        retain_intervals=False,
+                        slice_repair_s=3_600.0, scenario=_one_burst())
+        sim = FleetSim(cfg)
+        sim.submit(JobSpec("gang", chips=8, n_slices=2, work=8 * 1e9,
+                           elastic=elastic, arrival=0.0))
+        sim.run()
+        return sim.report().mpg
+    assert mpg(True) > mpg(False)
+
+
+@pytest.mark.parametrize("preset", ("failure_storm", "maintenance",
+                                    "peak_week"))
+@pytest.mark.parametrize("elastic", (False, True))
+def test_repair_window_identical_across_engines(preset, elastic):
+    """Repair sentinels, timed releases, maintenance subsumption, and
+    opportunistic regrow are bit-identical across engines."""
+    def totals(engine):
+        sim = build_sim(SCENARIOS[preset], size_mix=GOLDEN_SIZE_MIX,
+                        engine=engine, slice_repair_s=4 * 3600.0,
+                        job_mutator=lambda j: dataclasses.replace(
+                            j, elastic=elastic),
+                        **GOLDEN_KNOBS)
+        sim.run()
+        return sim.ledger.totals()
+    assert totals("reference") == totals("vectorized")

@@ -242,6 +242,72 @@ def test_committed_serve_bench_has_continuous_ahead():
         assert c["tokens_within_slo"] > s["tokens_within_slo"], name
 
 
+RESILIENCE_ARM = {
+    **GOODPUT_ROW,
+    "failures": int,
+    "preemptions": int,
+    "reshard_chip_time": non_negative,
+    "gang_stall_chip_time": non_negative,
+    "lost_by_layer": each_value(non_negative),
+    "wall_s": non_negative,
+}
+
+RESILIENCE_PRESET = {
+    "rigid": RESILIENCE_ARM,
+    "elastic": RESILIENCE_ARM,
+    # the PR acceptance invariant: elastic recovers MPG over rigid at
+    # equal capacity, checked per committed section below
+    "recovered_mpg": float,
+    "recovered_by_layer": dict,
+}
+
+RESILIENCE_SECTION = {
+    "config": {"n_jobs": positive, "seed": int, "n_pods": positive,
+               "pod_size": positive, "horizon_days": positive,
+               "slice_repair_s": positive, "target_load": positive},
+    "config_fingerprint": str,
+    "failure_storm": RESILIENCE_PRESET,
+    "maintenance": RESILIENCE_PRESET,
+}
+
+
+def test_committed_resilience_bench_shows_elastic_recovery():
+    """PR acceptance: the committed BENCH_resilience.json shows elastic
+    recovering MPG over rigid on the failure_storm AND maintenance
+    presets at equal capacity, in every section, with the loss moves
+    attributed per layer; the tiny section also pins cross-engine
+    equivalence under the repair window."""
+    path = REPO_ROOT / "BENCH_resilience.json"
+    if not path.exists():
+        pytest.skip("BENCH_resilience.json not committed in this checkout")
+    bench = json.loads(path.read_text())
+    sections = {k: v for k, v in bench.items()
+                if isinstance(v, dict) and "config_fingerprint" in v}
+    assert "tiny" in sections
+    for name, section in sections.items():
+        problems = check(section, RESILIENCE_SECTION,
+                         f"BENCH_resilience.{name}")
+        assert not problems, "\n".join(problems)
+        for preset in ("failure_storm", "maintenance"):
+            p = section[preset]
+            assert p["recovered_mpg"] > 0, (name, preset)
+            assert p["recovered_mpg"] == pytest.approx(
+                p["elastic"]["MPG"] - p["rigid"]["MPG"], abs=1e-6)
+            # the mechanism, visible in the loss buckets: only the rigid
+            # arm stalls surviving gang slices, only the elastic arm pays
+            # reshard transfers
+            assert p["elastic"]["reshard_chip_time"] > 0, (name, preset)
+            assert p["elastic"]["gang_stall_chip_time"] == 0, (name, preset)
+            assert p["rigid"]["reshard_chip_time"] == 0, (name, preset)
+    assert bench["tiny"]["failure_storm"]["equivalence"]["engines_identical"]
+    assert bench["tiny"]["maintenance"]["equivalence"]["engines_identical"]
+    # the advisor section ranks the resiliency knobs on the same preset
+    adv = bench.get("advisor")
+    if adv:
+        assert {r["knob"] for r in adv["ranking"]} == \
+            {"elastic_resize", "multi_slice_gang"}
+
+
 def test_scenario_sweep_covers_the_acceptance_matrix():
     """PR acceptance: >= 6 scenarios x 3 policy combos in the artifact."""
     path = RESULTS / "scenario_sweep.json"
