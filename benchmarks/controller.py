@@ -1,0 +1,363 @@
+"""Closed-loop controller benchmark: regret vs static policies, plus an
+adversarially-searched worst-case suite (BENCH_controller.json).
+
+The advisor ranks fixes after the fact; the adaptive controller
+(``repro.fleet.controller``) reacts during the run.  This benchmark asks
+the question that justifies its existence: *does closing the loop beat
+committing to any single static policy up front?*  Three arms per
+scenario preset, identical workload and cluster:
+
+  * ``rigid``   — every job inelastic (the conservative static fleet);
+  * ``elastic`` — every job elastic (the aggressive static fleet);
+  * ``controlled`` — the rigid workload plus the online controller,
+    which may flip the fleet elastic, evict stalled gangs, retune Daly
+    checkpoint intervals from the observed failure rate, and switch
+    scheduler policies — paying a visible ``policy_switch`` interval per
+    decision;
+
+and three committed gates:
+
+  (a) per-preset regret vs the *oracle* static arm (the better of
+      rigid/elastic chosen per scenario, by sweep) stays within 5%;
+  (b) the controlled arm's MPG averaged across all 7 presets is strictly
+      above the best *single* static arm's average — no one static
+      policy matches adapting;
+  (c) on every scenario in the committed adversarial suite — found by a
+      seeded random-restart hill-climber (``repro.fleet.adversary``)
+      mutating burst/MTBF/maintenance/arrival/repair parameters to
+      minimize *controlled* MPG — the controlled arm still meets the
+      best static arm's MPG (within the same 5% regret band, and above
+      it in the committed suite).
+
+The sim is deterministic and the controller consumes only
+engine-identical state, so ``--check`` is exact: the tiny section re-runs
+(including the adversarial re-evaluation) and every MPG must match the
+committed floats bit-for-bit; the controlled arm additionally runs under
+both engines and must stream identical ledger totals and switch logs.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import pathlib
+import resource
+import sys
+import time
+from typing import Dict, Optional
+
+from repro.core.attribution import AttributionWaterfall
+from repro.fleet.adversary import scenario_from, search_worst
+from repro.fleet.advisor import SATURATED_LOAD
+from repro.fleet.controller import AdaptiveController
+from repro.fleet.scenarios import GOLDEN_SIZE_MIX, SCENARIOS, Scenario, \
+    build_sim
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+BENCH_PATH = REPO_ROOT / "BENCH_controller.json"
+DAY = 24 * 3600.0
+
+PRESETS = tuple(SCENARIOS)            # all 7
+REGRET_BAND = 0.05                    # gate (a): relative MPG regret
+REPAIR_S = 4 * 3600.0                 # repair window that makes the
+                                      # rigid/elastic trade real
+
+TINY = {"n_jobs": 24, "seed": 1234, "n_pods": 2, "pod_size": 64,
+        "horizon_days": 1.0, "size_mix": GOLDEN_SIZE_MIX,
+        "slice_repair_s": REPAIR_S, "target_load": SATURATED_LOAD}
+FULL = {"n_jobs": 200, "seed": 42, "n_pods": 8, "pod_size": 256,
+        "horizon_days": 7.0, "size_mix": None,
+        "slice_repair_s": REPAIR_S, "target_load": SATURATED_LOAD}
+
+ADVERSARY = {"seed": 1234, "restarts": 3, "steps": 8, "keep": 3}
+
+
+def _fingerprint(cfg: Dict) -> str:
+    return hashlib.sha256(
+        json.dumps(cfg, sort_keys=True).encode()).hexdigest()[:16]
+
+
+def _peak_rss_mb() -> float:
+    # ru_maxrss is KiB on Linux, bytes on macOS
+    peak = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    if sys.platform == "darwin":
+        peak /= 1024
+    return round(peak / 1024, 1)
+
+
+def _mutator(elastic: Optional[bool]):
+    if elastic is None:
+        return None
+    return lambda j: dataclasses.replace(j, elastic=elastic)
+
+
+def _build(scenario: Scenario, cfg: Dict, *, elastic: Optional[bool],
+           controller: Optional[AdaptiveController] = None,
+           engine: str = "vectorized",
+           slice_repair_s: Optional[float] = None):
+    scenario = dataclasses.replace(scenario,
+                                   target_load=cfg["target_load"])
+    return build_sim(scenario, n_jobs=cfg["n_jobs"], seed=cfg["seed"],
+                     n_pods=cfg["n_pods"], pod_size=cfg["pod_size"],
+                     horizon=cfg["horizon_days"] * DAY,
+                     size_mix=cfg["size_mix"],
+                     slice_repair_s=(cfg["slice_repair_s"]
+                                     if slice_repair_s is None
+                                     else slice_repair_s),
+                     engine=engine, retain_intervals=False,
+                     job_mutator=_mutator(elastic), controller=controller)
+
+
+def _run_arm(scenario: Scenario, cfg: Dict, *, elastic: Optional[bool],
+             controlled: bool = False, **build_kw) -> Dict:
+    ctrl = AdaptiveController() if controlled else None
+    sim = _build(scenario, cfg, elastic=elastic, controller=ctrl,
+                 **build_kw)
+    wf = ctrl.waterfall if ctrl else \
+        AttributionWaterfall().attach(sim.ledger)
+    t0 = time.perf_counter()
+    sim.run()
+    wall = time.perf_counter() - t0
+    wf.assert_conserves(sim.ledger)
+    rep = sim.report()
+    wfr = wf.report()
+    out = {
+        "SG": round(rep.sg, 6), "RG": round(rep.rg, 6),
+        "PG": round(rep.pg, 6), "MPG": round(rep.mpg, 6),
+        "failures": sum(r.failures for r in sim.jobs.values()),
+        "lost_by_layer": {k: round(v, 1)
+                          for k, v in wfr["lost_by_layer"].items()},
+        "wall_s": round(wall, 3),
+    }
+    if ctrl is not None:
+        out["switches"] = [
+            {"t": s["t"], "rule": s["rule"], "mode": s["mode"]}
+            for s in ctrl.switches]
+        out["policy_switch_chip_time"] = round(
+            wf.bucket_totals().get("policy_switch", 0.0), 1)
+    return out
+
+
+def _equivalence(scenario: Scenario, cfg: Dict, **build_kw) -> Dict:
+    """The controlled arm under both engines must stream bit-identical
+    ledger totals AND take the identical switch sequence."""
+    runs = {}
+    for engine in ("vectorized", "reference"):
+        ctrl = AdaptiveController()
+        sim = _build(scenario, cfg, elastic=False, controller=ctrl,
+                     engine=engine, **build_kw)
+        sim.run()
+        runs[engine] = (sim.ledger.totals(), ctrl.switches)
+    tv, sv = runs["vectorized"]
+    tr, sr = runs["reference"]
+    assert tv == tr, f"engines diverged on {scenario.name}: {tv} != {tr}"
+    assert sv == sr, (f"switch logs diverged on {scenario.name}: "
+                      f"{sv} != {sr}")
+    return {"n_events": tv["n_events"], "n_switches": len(sv),
+            "engines_identical": True}
+
+
+def _preset_section(preset: str, cfg: Dict, cross_engine: bool) -> Dict:
+    scenario = SCENARIOS[preset]
+    rigid = _run_arm(scenario, cfg, elastic=False)
+    elastic = _run_arm(scenario, cfg, elastic=True)
+    controlled = _run_arm(scenario, cfg, elastic=False, controlled=True)
+    oracle = max(("rigid", "elastic"),
+                 key=lambda a: {"rigid": rigid, "elastic": elastic}[a]["MPG"])
+    best = {"rigid": rigid, "elastic": elastic}[oracle]["MPG"]
+    layers = sorted(set(rigid["lost_by_layer"])
+                    | set(controlled["lost_by_layer"]))
+    section = {
+        "rigid": rigid,
+        "elastic": elastic,
+        "controlled": controlled,
+        "oracle_static": oracle,
+        "best_static_mpg": best,
+        # relative regret vs the per-scenario oracle; negative means the
+        # controller beat every static arm outright
+        "regret_mpg": round((best - controlled["MPG"]) / best, 6),
+        # positive = chip-time the rigid static arm lost in that layer
+        # and the controlled arm recovered
+        "recovered_by_layer": {
+            k: round(rigid["lost_by_layer"].get(k, 0.0)
+                     - controlled["lost_by_layer"].get(k, 0.0), 1)
+            for k in layers},
+    }
+    if cross_engine:
+        section["equivalence"] = _equivalence(scenario, cfg)
+    return section
+
+
+def _scale_section(cfg: Dict, cross_engine: bool) -> Dict:
+    section: Dict[str, object] = {
+        "config": {**cfg, "repair_hours": cfg["slice_repair_s"] / 3600.0},
+        "config_fingerprint": _fingerprint(cfg),
+    }
+    avgs = {"rigid": 0.0, "elastic": 0.0, "controlled": 0.0}
+    for preset in PRESETS:
+        section[preset] = _preset_section(preset, cfg, cross_engine)
+        for arm in avgs:
+            avgs[arm] += section[preset][arm]["MPG"] / len(PRESETS)
+    best_arm = max(("rigid", "elastic"), key=lambda a: avgs[a])
+    section["summary"] = {
+        "avg_mpg": {k: round(v, 6) for k, v in avgs.items()},
+        "best_static_arm": best_arm,
+        # gate (b): adapting beats committing to the best single policy
+        "controller_beats_best_static_avg":
+            bool(avgs["controlled"] > avgs[best_arm]),
+        "max_regret_mpg": max(section[p]["regret_mpg"] for p in PRESETS),
+    }
+    return section
+
+
+def _adversarial_section(cfg: Dict) -> Dict:
+    """Hill-climb scenario space against the *controlled* arm, then
+    re-score the static arms on every kept worst case (gate (c))."""
+
+    def evaluate(genome) -> float:
+        scenario = scenario_from(genome)
+        out = _run_arm(scenario, cfg, elastic=False, controlled=True,
+                       slice_repair_s=genome["repair_hours"] * 3600.0)
+        return out["MPG"]
+
+    worst = search_worst(evaluate, seed=ADVERSARY["seed"],
+                         restarts=ADVERSARY["restarts"],
+                         steps=ADVERSARY["steps"],
+                         keep=ADVERSARY["keep"])
+    suite = []
+    for i, entry in enumerate(worst):
+        genome = entry["genome"]
+        scenario = scenario_from(genome, name=f"adversarial_{i}")
+        repair = genome["repair_hours"] * 3600.0
+        arms = {
+            "controlled": _run_arm(scenario, cfg, elastic=False,
+                                   controlled=True,
+                                   slice_repair_s=repair),
+            "rigid": _run_arm(scenario, cfg, elastic=False,
+                              slice_repair_s=repair),
+            "elastic": _run_arm(scenario, cfg, elastic=True,
+                                slice_repair_s=repair),
+        }
+        best = max(arms["rigid"]["MPG"], arms["elastic"]["MPG"])
+        suite.append({
+            "name": scenario.name,
+            "genome": genome,
+            "controlled_mpg": arms["controlled"]["MPG"],
+            "rigid_mpg": arms["rigid"]["MPG"],
+            "elastic_mpg": arms["elastic"]["MPG"],
+            "best_static_mpg": best,
+            "controller_survives":
+                bool(arms["controlled"]["MPG"] >= best),
+            "n_switches": len(arms["controlled"]["switches"]),
+        })
+    return {"search": dict(ADVERSARY), "config": dict(cfg),
+            "config_fingerprint": _fingerprint(cfg), "suite": suite}
+
+
+def _load_committed() -> Dict:
+    if BENCH_PATH.exists():
+        return json.loads(BENCH_PATH.read_text())
+    return {}
+
+
+def _write(bench: Dict) -> None:
+    bench["version"] = 1
+    bench["generated_by"] = "benchmarks/controller.py"
+    bench["peak_rss_mb"] = _peak_rss_mb()
+    BENCH_PATH.write_text(json.dumps(bench, indent=1, sort_keys=True) + "\n")
+
+
+def check(fresh_tiny: Dict, fresh_adv: Dict, committed: Dict) -> None:
+    """CI gate: (a) per-preset regret inside the band, (b) controlled
+    average above the best static average, (c) the controller survives
+    every committed adversarial scenario — then exact-float comparison
+    against the committed baseline (same fingerprint => same floats)."""
+    for preset in PRESETS:
+        regret = fresh_tiny[preset]["regret_mpg"]
+        if regret > REGRET_BAND:
+            raise SystemExit(
+                f"controller --check FAILED: regret on {preset} is "
+                f"{regret:.4f} > {REGRET_BAND} vs the "
+                f"{fresh_tiny[preset]['oracle_static']} oracle")
+    if not fresh_tiny["summary"]["controller_beats_best_static_avg"]:
+        raise SystemExit(
+            "controller --check FAILED: controlled average "
+            f"{fresh_tiny['summary']['avg_mpg']} does not beat the best "
+            "static arm")
+    for row in fresh_adv["suite"]:
+        if not row["controller_survives"]:
+            raise SystemExit(
+                f"controller --check FAILED: adversarial scenario "
+                f"{row['name']} (genome {row['genome']}) drives the "
+                f"controlled MPG {row['controlled_mpg']} below the best "
+                f"static arm {row['best_static_mpg']}")
+    base = committed.get("tiny")
+    if not base or \
+            base.get("config_fingerprint") != fresh_tiny["config_fingerprint"]:
+        print("controller --check: no comparable committed tiny baseline; "
+              "gates (a)-(c) only")
+        return
+    for preset in PRESETS:
+        for arm in ("rigid", "elastic", "controlled"):
+            got = fresh_tiny[preset][arm]["MPG"]
+            want = base[preset][arm]["MPG"]
+            if got != want:
+                raise SystemExit(
+                    f"controller --check FAILED: {preset}/{arm} MPG {got} "
+                    f"!= committed {want} (deterministic sim — a semantic "
+                    "change must re-bless BENCH_controller.json)")
+    badv = committed.get("adversarial")
+    if badv and badv.get("config_fingerprint") == \
+            fresh_adv["config_fingerprint"] and \
+            badv.get("search") == fresh_adv["search"]:
+        for got, want in zip(fresh_adv["suite"], badv["suite"]):
+            if got["genome"] != want["genome"] or \
+                    got["controlled_mpg"] != want["controlled_mpg"]:
+                raise SystemExit(
+                    "controller --check FAILED: adversarial suite drifted "
+                    f"from committed ({got['name']}): {got} != {want}")
+    print("controller --check OK: regret <= "
+          f"{REGRET_BAND} on {len(PRESETS)} presets, controlled avg beats "
+          "best static, controller survives the adversarial suite, exact "
+          "match vs committed baseline")
+
+
+def main(tiny: bool = False, do_check: bool = False) -> Dict:
+    committed = _load_committed()
+    bench = dict(committed)
+    t_start = time.monotonic()
+    fresh_tiny = _scale_section(TINY, cross_engine=True)
+    bench["tiny"] = fresh_tiny
+    fresh_adv = _adversarial_section(TINY)
+    bench["adversarial"] = fresh_adv
+    if do_check:
+        check(fresh_tiny, fresh_adv, committed)
+    if not tiny:
+        bench["full"] = _scale_section(FULL, cross_engine=False)
+    _write(bench)
+    wall_us = (time.monotonic() - t_start) * 1e6
+    derived = {
+        "tiny_max_regret": fresh_tiny["summary"]["max_regret_mpg"],
+        "tiny_ctrl_avg": fresh_tiny["summary"]["avg_mpg"]["controlled"],
+        "adv_survived": all(r["controller_survives"]
+                            for r in fresh_adv["suite"]),
+    }
+    if "full" in bench:
+        derived["full_max_regret"] = \
+            bench["full"]["summary"]["max_regret_mpg"]
+        derived["full_ctrl_avg"] = \
+            bench["full"]["summary"]["avg_mpg"]["controlled"]
+    print(f"controller,{wall_us:.1f},{json.dumps(derived, sort_keys=True)}")
+    return bench
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: tiny arms + adversarial suite only")
+    ap.add_argument("--check", action="store_true",
+                    help="enforce gates (a)-(c) and exact-float match vs "
+                         "the committed BENCH_controller.json")
+    args = ap.parse_args()
+    main(tiny=args.tiny, do_check=args.check)

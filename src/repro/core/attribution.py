@@ -272,6 +272,24 @@ class AttributionWaterfall:
             total += ct
         return float(Fraction(total, 1 << _SHIFT))
 
+    def bucket_totals(self) -> Dict[str, float]:
+        """Chip-time per named loss bucket, folding the exact (layer,
+        phase) cells *and* the demand-side waits by bucket name.  Exact
+        integer cells convert to floats identically on every engine, so a
+        controller (or the advisor's addressable-loss early-exit) reading
+        these deltas stays decision-identical across engines.  Productive
+        cells and empty buckets are omitted."""
+        one = 1 << _SHIFT
+        out: Dict[str, float] = {}
+        for cells in (self._cells, self._waits):
+            for (lyr, ph), ct in sorted(cells.items()):
+                phase = Phase(ph)
+                if phase in PRODUCTIVE_PHASES or ct == 0:
+                    continue
+                bucket = loss_bucket(phase, Layer(lyr))
+                out[bucket] = out.get(bucket, 0.0) + float(Fraction(ct, one))
+        return out
+
     def report(self, capacity_chip_time: Optional[float] = None
                ) -> Dict[str, object]:
         """The waterfall, JSON-ready: capacity decomposed into ideal,

@@ -36,6 +36,11 @@ class Phase(enum.Enum):
     RESHARD = "reshard"              # elastic resize: moving checkpointed
                                      # shards between the old and new
                                      # partition assignments (RG loss)
+    CONTROL = "control"              # adaptive-controller overhead: the
+                                     # orchestration cost of a live policy
+                                     # switch, charged to the scheduling
+                                     # layer so closing the loop is itself
+                                     # visible in the waterfall (RG loss)
 
 
 class Layer(enum.Enum):
@@ -71,6 +76,7 @@ DEFAULT_LAYER: Dict[Phase, Layer] = {
     Phase.IDLE: Layer.SCHEDULING,
     Phase.SLO_BREACH: Layer.SCHEDULING,
     Phase.RESHARD: Layer.SCHEDULING,
+    Phase.CONTROL: Layer.SCHEDULING,
 }
 
 # (Phase, Layer) -> named loss bucket: the rows of the attribution
@@ -95,6 +101,7 @@ LOSS_BUCKETS: Dict[tuple, str] = {
     (Phase.IDLE, Layer.HARDWARE): "gang_stall",
     (Phase.SLO_BREACH, Layer.SCHEDULING): "slo_breach",
     (Phase.RESHARD, Layer.SCHEDULING): "reshard_transfer",
+    (Phase.CONTROL, Layer.SCHEDULING): "policy_switch",
 }
 
 
@@ -138,7 +145,7 @@ class Interval:
 
 ALLOCATED_PHASES = {Phase.INIT, Phase.STEP, Phase.CHECKPOINT,
                     Phase.DATA_STALL, Phase.LOST, Phase.IDLE,
-                    Phase.SLO_BREACH, Phase.RESHARD}
+                    Phase.SLO_BREACH, Phase.RESHARD, Phase.CONTROL}
 PRODUCTIVE_PHASES = {Phase.STEP}
 
 

@@ -463,6 +463,28 @@ class GoodputLedger:
                         "ideal_chip_time": rep.ideal_chip_time})
         return out
 
+    def tail_series(self, n_windows: int,
+                    capacity_chips: float) -> List[Dict[str, float]]:
+        """The most recent ``n_windows`` rows of the windowed SG/RG/PG
+        series — the online controller's observation stream.  Same row
+        shape as :meth:`series`, but O(n_windows) instead of walking every
+        window, so a per-boundary observer stays cheap on long horizons."""
+        if not self._windows or n_windows <= 0:
+            return []
+        idxs = sorted(self._windows)[-n_windows:]
+        win_cap = capacity_chips * self.window
+        out = []
+        for widx in idxs:
+            rep = self._windows[widx].report(win_cap)
+            out.append({"t0": widx * self.window,
+                        "t1": (widx + 1) * self.window,
+                        "sg": rep.sg, "rg": rep.rg, "pg": rep.pg,
+                        "mpg": rep.mpg,
+                        "allocated_chip_time": rep.allocated_chip_time,
+                        "productive_chip_time": rep.productive_chip_time,
+                        "ideal_chip_time": rep.ideal_chip_time})
+        return out
+
     def totals(self) -> Dict[str, object]:
         """The exact accumulator state a trace replay must reproduce
         bit-for-bit: event count, capacity, the three MPG chip-time sums,

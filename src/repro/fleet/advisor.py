@@ -93,11 +93,21 @@ class Case:
 @dataclasses.dataclass(frozen=True)
 class Knob:
     """One counterfactual optimization: name, the MPG term it targets
-    (for reporting), and a Case -> Case transform."""
+    (for reporting), and a Case -> Case transform.
+
+    ``addresses`` names the waterfall loss buckets the knob can recover
+    from; when the baseline shows zero chip-time in every listed bucket,
+    ``what_if`` skips the resimulation outright (recovered is 0.0 by
+    construction — there is nothing to recover).  ``skip_when`` is a
+    structural predicate on the Case for knobs whose no-op condition is
+    not a loss bucket (e.g. the policies are already the paper combo).
+    An empty ``addresses`` with no predicate means always resimulate."""
     name: str
     description: str
     targets: str                      # "SG" | "RG" | "PG" (primary term)
     build: Callable[[Case], Case]
+    addresses: tuple = ()             # loss-bucket names (see LOSS_BUCKETS)
+    skip_when: Optional[Callable[[Case], bool]] = None
 
 
 def _daly_interval(spec: JobSpec, mtbf_factor: float) -> float:
@@ -166,26 +176,45 @@ def _knob_generation(case: Case) -> Case:
         pod_generations=(best,)))
 
 
+_PAPER_POLICIES = {"placement": "best_fit", "preemption": "protect_xl",
+                   "defrag": "drain_for_xl"}
+
+
+def _already_paper_policies(case: Case) -> bool:
+    # build_sim's defaults ARE the paper combo, so an absent kwarg means
+    # the knob would rebuild the byte-identical sim
+    return all(case.kwargs.get(k, v) == v for k, v in
+               _PAPER_POLICIES.items())
+
+
+def _homogeneous_fleet(case: Case) -> bool:
+    return len(set(case.scenario.pod_generations)) <= 1
+
+
 KNOBS: Dict[str, Knob] = {k.name: k for k in (
     Knob("async_checkpointing",
          "async snapshot-to-host checkpoints for every job", "RG",
-         _knob_async),
+         _knob_async, addresses=("checkpoint_write",)),
     Knob("checkpoint_interval_daly",
          "re-tune checkpoint intervals to sqrt(2*write*MTBF)", "RG",
-         _knob_daly),
+         _knob_daly, addresses=("checkpoint_write", "failure_rollback",
+                                "preemption_rollback")),
     Knob("compile_cache_warm",
-         "every launch hits the AOT compile cache", "RG", _knob_cache),
+         "every launch hits the AOT compile cache", "RG", _knob_cache,
+         addresses=("compile",)),
     Knob("data_pipeline_2x",
-         "halve input-pipeline stall fractions", "RG", _knob_data),
+         "halve input-pipeline stall fractions", "RG", _knob_data,
+         addresses=("input_stall",)),
     Knob("single_controller",
          "migrate multi-client jobs to the single-controller framework",
          "RG", _knob_pathways),
     Knob("scheduler_paper_policies",
          "swap to best-fit placement + protect-XL preemption + "
-         "drain-for-XL defrag", "SG", _knob_policies),
+         "drain-for-XL defrag", "SG", _knob_policies,
+         skip_when=_already_paper_policies),
     Knob("generation_upgrade",
          "upgrade every pod to the best hardware generation present",
-         "PG", _knob_generation),
+         "PG", _knob_generation, skip_when=_homogeneous_fleet),
     Knob("elastic_resize",
          "restart preempted/failed jobs degraded instead of queueing "
          "for the full shape", "SG", _knob_elastic),
@@ -215,7 +244,11 @@ def baseline_case(source: Union[str, Scenario, Trace], **kwargs) -> Case:
             raise ValueError(f"unknown scenario preset {source!r}; "
                              f"choose from {sorted(SCENARIOS)}")
         source = SCENARIOS[source]
-    return Case(scenario=source, kwargs=dict(kwargs))
+    kwargs = dict(kwargs)
+    # job_mutator is a Case field, not a build_sim kwarg, so knob mutators
+    # chain onto it instead of silently replacing it
+    job_mutator = kwargs.pop("job_mutator", None)
+    return Case(scenario=source, kwargs=kwargs, job_mutator=job_mutator)
 
 
 def from_trace(trace: Trace) -> Case:
@@ -275,9 +308,22 @@ def _composition(rep: GoodputReport) -> Dict[str, float]:
     return {"SG": rep.sg, "RG": rep.rg, "PG": rep.pg, "MPG": rep.mpg}
 
 
+def _should_skip(knob: Knob, case: Case,
+                 base_buckets: Dict[str, float]) -> bool:
+    """True when the baseline proves the knob can recover nothing: its
+    structural no-op predicate holds, or every loss bucket it addresses
+    holds zero chip-time."""
+    if knob.skip_when is not None and knob.skip_when(case):
+        return True
+    if knob.addresses:
+        return all(base_buckets.get(b, 0.0) == 0.0 for b in knob.addresses)
+    return False
+
+
 def what_if(source: Union[str, Scenario, Trace],
             knobs: Optional[List[str]] = None,
             saturate: Union[str, float, None] = "auto",
+            skip_unaddressable: bool = True,
             **kwargs) -> Dict[str, object]:
     """Rank counterfactual knobs by recovered MPG on one baseline.
 
@@ -290,6 +336,13 @@ def what_if(source: Union[str, Scenario, Trace],
     ``saturate``: target demand load for the workload ("auto" =
     ``SATURATED_LOAD`` for presets/scenarios, untouched for traces —
     see the module docstring; ``None`` = keep the scenario's own load).
+
+    ``skip_unaddressable``: early-exit knobs whose addressable loss is
+    provably zero in the baseline waterfall (or whose structural no-op
+    predicate holds) instead of resimulating them — their rows report the
+    baseline composition, ``recovered_mpg: 0.0``, and ``skipped: true``.
+    The ranking is unchanged: a skipped knob's resimulation would rebuild
+    the byte-identical sim (see ``tests/test_advisor.py``).
     """
     case = baseline_case(source, **kwargs)
     if saturate == "auto":
@@ -317,10 +370,13 @@ def what_if(source: Union[str, Scenario, Trace],
         baseline["reproduces_trace"] = True
 
     names = list(KNOBS) if knobs is None else list(knobs)
+    base_buckets = base_wf.bucket_totals()
     rows = []
     for name in names:
         knob = KNOBS[name]
-        _, rep, _ = run_case(knob.build(case))
+        skipped = skip_unaddressable and _should_skip(knob, case,
+                                                      base_buckets)
+        rep = base_rep if skipped else run_case(knob.build(case))[1]
         rows.append({
             "knob": name,
             "description": knob.description,
@@ -332,6 +388,7 @@ def what_if(source: Union[str, Scenario, Trace],
             "d_pg": rep.pg - base_rep.pg,
             "recovered_ideal_chip_time":
                 (rep.mpg - base_rep.mpg) * base_rep.capacity_chip_time,
+            "skipped": skipped,
         })
     rows.sort(key=lambda r: (-r["recovered_mpg"], r["knob"]))
     return {"scenario": case.scenario.name,

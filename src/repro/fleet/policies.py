@@ -357,3 +357,14 @@ def resolve_preemption(spec: Union[str, PreemptionPolicy]) -> PreemptionPolicy:
 
 def resolve_defrag(spec: Union[str, DefragPolicy]) -> DefragPolicy:
     return _resolve(spec, DEFRAG_POLICIES, "defrag")
+
+
+# named policy combinations (shared by the advisor's scheduler knob, the
+# adaptive controller's rescue rule, and the controller benchmark): the
+# paper's §5.3 scheduler vs. the no-information baseline
+PAPER_COMBO: Dict[str, str] = {"placement": "best_fit",
+                               "preemption": "protect_xl",
+                               "defrag": "drain_for_xl"}
+NAIVE_COMBO: Dict[str, str] = {"placement": "spread",
+                               "preemption": "priority_only",
+                               "defrag": "none"}

@@ -215,7 +215,8 @@ def build_sim(scenario: Scenario, *, n_jobs: int = 200, seed: int = 0,
               job_mutator: Optional[Callable] = None,
               engine: str = "vectorized",
               sample_dt: Optional[float] = None,
-              slice_repair_s: float = 0.0) -> FleetSim:
+              slice_repair_s: float = 0.0,
+              controller=None) -> FleetSim:
     """A ready-to-run ``FleetSim`` for one scenario.
 
     Hermetic by construction: the pg table defaults to ``{}`` (per-arch PG
@@ -227,6 +228,10 @@ def build_sim(scenario: Scenario, *, n_jobs: int = 200, seed: int = 0,
     — the hook the what-if advisor (``repro.fleet.advisor``) uses to
     apply counterfactual knobs (async checkpointing, warm compile cache,
     ...) to an otherwise byte-identical workload.
+
+    ``controller`` binds an online ``repro.fleet.controller``
+    ``AdaptiveController`` onto the sim (its attribution waterfall
+    attaches before any event, so it must bind at build time).
     """
     cfg = SimConfig(n_pods=n_pods, pod_size=pod_size, horizon=horizon,
                     seed=seed, placement=placement, preemption=preemption,
@@ -258,6 +263,8 @@ def build_sim(scenario: Scenario, *, n_jobs: int = 200, seed: int = 0,
                      else [[k, v] for k, v in size_mix.items()]),
         "pg_table": sorted((pg_table or {}).items()),
     }
+    if controller is not None:
+        controller.bind(sim)
     return sim
 
 

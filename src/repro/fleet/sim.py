@@ -43,6 +43,20 @@ if TYPE_CHECKING:                     # import cycle: scenarios builds sims
 MAINT_TAG = "__maint__"               # sentinel allocation id prefix for
                                       # drained (in-maintenance) pods
 
+# Per-generation repair-time distributions (ROADMAP repair-realism item):
+# ``SimConfig.slice_repair_s`` stays the fleet-wide *scale* knob, but the
+# actual window is that scale times a lognormal multiplier drawn on the
+# sim's dedicated repair stream — older generations take longer to source
+# parts for and vary more; the newest generation repairs tightest.  The
+# (mu, sigma) pairs are of the underlying normal, so the median multiplier
+# is e**mu (~1.0: the configured scale remains the typical repair).
+REPAIR_LOGNORMAL: Dict[str, Tuple[float, float]] = {
+    "tpu-v4": (0.15, 0.60),
+    "tpu-v5e": (0.0, 0.45),
+    "tpu-v5p": (-0.10, 0.35),
+}
+_REPAIR_LOGNORMAL_DEFAULT = (0.0, 0.45)
+
 
 @dataclasses.dataclass
 class SimConfig:
@@ -142,6 +156,15 @@ class FleetSim:
         self._slice_seq: Dict[str, int] = defaultdict(int)
         self._gang_wait: Dict[str, dict] = {}
         self._repair_seq = 0                 # monotonic repair sentinel ids
+        # repair-time sampling stream (drawn only under a repair window,
+        # so the default slice_repair_s=0 stays byte-identical)
+        self._repair_rng = random.Random(f"{cfg.seed}:repair")
+        # online adaptive controller (repro.fleet.controller): None means
+        # static policies for the whole run — the historical behaviour
+        self.controller = None
+        # fleet-wide elastic-resize override: None defers to each job's
+        # spec.elastic flag; True/False is the controller forcing it
+        self._elastic_override: Optional[bool] = None
         # running elastic jobs currently below their submitted shape, in
         # degradation order (a dict, not a set: iteration order must be
         # deterministic and identical across engines)
@@ -268,6 +291,46 @@ class FleetSim:
         stall = max(0.0, min(stall, 1.0 - step - ckpt_overhead))
         return step, ckpt_overhead, stall
 
+    # ---- live control hooks ----------------------------------------------
+    def _job_elastic(self, spec: JobSpec) -> bool:
+        """Whether ``spec`` resizes elastically right now: the spec's own
+        flag unless the adaptive controller forced a fleet-wide override."""
+        ov = self._elastic_override
+        return spec.elastic if ov is None else ov
+
+    def set_policies(self, placement=None, preemption=None,
+                     defrag=None) -> None:
+        """Swap live scheduler policy objects mid-run (the adaptive
+        controller's switch hook; names or strategy objects, None keeps
+        the current one).  Engine subclasses re-derive policy-dependent
+        caches here."""
+        if placement is not None:
+            self.placement = resolve_placement(placement)
+        if preemption is not None:
+            self.preemption = resolve_preemption(preemption)
+        if defrag is not None:
+            self.defrag = resolve_defrag(defrag)
+
+    def attach_controller(self, controller) -> None:
+        """Register an online adaptive controller and schedule its first
+        decision boundary; the run loop hands it the sim on every timed
+        ``control`` event (see ``repro.fleet.controller``)."""
+        self.controller = controller
+        self._push(controller.decide_every_s, "control", "")
+
+    def _control_sync(self) -> None:
+        """Engine hook: bring the ledger/waterfall state current before a
+        controller observation.  The reference engine emits per event, so
+        there is nothing to do; the vectorized engine flushes its columnar
+        buffers here so both engines decide on identical state."""
+
+    def _on_control(self, t: float) -> None:
+        self._control_sync()
+        self.controller.on_boundary(self)
+        nxt = t + self.controller.decide_every_s
+        if nxt <= self.cfg.horizon:
+            self._push(nxt, "control", "")
+
     # ---- scheduling ------------------------------------------------------
     def _eff_priority(self, job_id: str) -> float:
         """Priority with aging: +1 level per 6h queued (starvation guard)."""
@@ -347,15 +410,31 @@ class FleetSim:
         """Free a failed slice's hardware — immediately when repair is
         instant (``slice_repair_s == 0``, byte-identical to the historical
         behaviour), otherwise held under a repair sentinel until a timed
-        ``repair`` event returns the chips to the allocator."""
+        ``repair`` event returns the chips to the allocator.  The window
+        is ``slice_repair_s`` scaled by the failed slice's generation-
+        specific lognormal draw (``REPAIR_LOGNORMAL``) on the dedicated
+        repair stream."""
         repair = self.cfg.slice_repair_s
         if repair <= 0:
             self.cluster.release(sid)
             return
+        repair *= self._sample_repair_factor(sid)
         self._repair_seq += 1
         tag = f"{REPAIR_TAG}{self._repair_seq}"
         self.cluster.retag(sid, tag)
         self._push(self.now + repair, "repair", tag)
+
+    def _sample_repair_factor(self, sid: str) -> float:
+        """Lognormal repair-time multiplier for the generation of the
+        failed slice's (first) pod; must run before the slice is retagged
+        (the allocation lookup goes away with the original id)."""
+        alloc = self.cluster.allocations.get(sid)
+        pod = 0
+        if alloc is not None:
+            pod = alloc.pod if alloc.pod >= 0 else alloc.pods[0]
+        mu, sigma = REPAIR_LOGNORMAL.get(self.pod_generation[pod],
+                                         _REPAIR_LOGNORMAL_DEFAULT)
+        return self._repair_rng.lognormvariate(mu, sigma)
 
     def _regrow_elastic(self, drain: tuple):
         """Grow running degraded elastic jobs back toward their submitted
@@ -423,7 +502,7 @@ class FleetSim:
             if job.remaining <= 0:
                 self._release_job(job_id)
                 return
-            if s.elastic:
+            if self._job_elastic(s):
                 # degrade: reshard onto the surviving slices, in place
                 job.spec = dataclasses.replace(
                     s, chips=s.slice_chips * (s.n_slices - 1),
@@ -484,9 +563,10 @@ class FleetSim:
         job_id = s.job_id
         exclude = drain if s.slice_chips <= self.cfg.pod_size else ()
         requeued = job_id in self._requeued
+        elastic = self._job_elastic(s)
         # regrow: a degraded elastic job first tries its submitted shape
         # (paying the reshard transfer back up on restart)
-        if requeued and s.elastic and s.chips < job.target_chips:
+        if requeued and elastic and s.chips < job.target_chips:
             tgt = dataclasses.replace(s, chips=job.target_chips,
                                       n_slices=job.target_slices)
             if self._alloc_job(job_id, tgt, exclude):
@@ -495,10 +575,10 @@ class FleetSim:
                 return True
         if self._alloc_job(job_id, s, exclude):
             self._start_segment(job)
-            if s.elastic and s.chips < job.target_chips:
+            if elastic and s.chips < job.target_chips:
                 self._degraded[job_id] = None
             return True
-        if requeued and s.elastic:
+        if requeued and elastic:
             # elastic resume: a preempted/failed job restarts degraded
             # instead of waiting for the full shape (paper §3.2's
             # utilization/stability trade; work rate scales with chips) —
@@ -808,6 +888,9 @@ class FleetSim:
                 self._end_maintenance(int(payload))
             elif kind == "burst":
                 self._failure_burst(int(payload))
+            elif kind == "control":
+                if self.controller is not None:
+                    self._on_control(t)
             elif kind == "repair":
                 # failed hardware back in service (no-op when maintenance
                 # already subsumed the sentinel)

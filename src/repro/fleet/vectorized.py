@@ -313,6 +313,35 @@ class VectorizedFleetSim(FleetSim):
         self._flush()
         return self
 
+    def _control_sync(self) -> None:
+        # a controller observation must see the same ledger/waterfall
+        # state the reference engine would at this boundary
+        self._flush()
+
+    # ---- live policy switching -------------------------------------------
+    def set_policies(self, placement=None, preemption=None,
+                     defrag=None) -> None:
+        super().set_policies(placement, preemption, defrag)
+        # re-derive the policy-dependent fast paths, exactly as __init__
+        # does, and drop every scheduling memo: facts proved against the
+        # old policy objects are no longer sound (clearing memos only
+        # re-runs real policy code with identical results, so the switch
+        # stays decision-identical to the reference engine)
+        if type(self.placement) is BestFitPlacement:
+            self.placement = _FastBestFit()
+        self._memo_placement = isinstance(
+            self.placement, _MEMO_PLACEMENTS) and type(
+            self.placement) in (_MEMO_PLACEMENTS + (_FastBestFit,))
+        self._memo_version = -1
+        self._memo_drain = None
+        self._fail_min0 = _NO_FAIL
+        self._fail_min_dr = _NO_FAIL
+        self._fail_need = _NO_FAIL
+        self._pre_fail_sub = []
+        self._pre_fail_xl = []
+        self._cand_epoch += 1
+        self._pre_sub_epoch = -1
+
     # ---- cached productive-rate model ------------------------------------
     def _rates(self, s: JobSpec) -> Tuple[float, float, float]:
         cached = s.__dict__.get("_rates_c")

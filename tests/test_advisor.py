@@ -169,3 +169,47 @@ def test_run_case_self_checks_conservation():
 def test_knob_names_lists_the_catalog():
     assert knob_names() == sorted(KNOBS)
     assert len(KNOBS) >= 5
+
+
+# ---------------------------------------------------------------------------
+# early-exit: provably-zero knobs are skipped without resimulation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("preset", ("steady", "hetero_fleet",
+                                    "failure_storm"))
+def test_skip_preserves_ranking_and_recoveries(preset):
+    """Skipping unaddressable knobs is an optimization, not a semantic
+    change: order and recovered_mpg match the exhaustive sweep exactly
+    (a skipped knob was going to score 0.0 anyway)."""
+    fast = what_if(preset, **TINY)
+    slow = what_if(preset, skip_unaddressable=False, **TINY)
+    assert [r["knob"] for r in fast["ranking"]] == \
+        [r["knob"] for r in slow["ranking"]]
+    for f, s in zip(fast["ranking"], slow["ranking"]):
+        assert f["recovered_mpg"] == s["recovered_mpg"]
+        if f["skipped"]:
+            assert f["recovered_mpg"] == 0.0
+    assert not any(r["skipped"] for r in slow["ranking"])
+
+
+def test_skip_flags_structural_noops_on_steady():
+    rep = what_if("steady", **TINY)
+    skipped = {r["knob"] for r in rep["ranking"] if r["skipped"]}
+    # steady is homogeneous and already runs the paper's scheduler combo
+    assert "generation_upgrade" in skipped
+    assert "scheduler_paper_policies" in skipped
+
+
+def test_skip_when_addressed_bucket_is_empty():
+    """A workload that never compiles (init_time=0) proves
+    compile_cache_warm can recover nothing — the advisor skips it from
+    the baseline waterfall instead of resimulating."""
+    no_compile = lambda j: dataclasses.replace(j, init_time=0.0)
+    rep = what_if("steady", knobs=["compile_cache_warm"],
+                  job_mutator=no_compile, **TINY)
+    (row,) = rep["ranking"]
+    assert row["skipped"] and row["recovered_mpg"] == 0.0
+    # and with compile time present it is NOT skipped
+    rep = what_if("steady", knobs=["compile_cache_warm"], **TINY)
+    (row,) = rep["ranking"]
+    assert not row["skipped"]

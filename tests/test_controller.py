@@ -1,0 +1,230 @@
+"""Adaptive-controller tests: cross-engine bit-identity of controlled
+runs, safety properties of the decision core (cooldown as a hypothesis
+property, no switches without evidence), visible switch overhead in the
+waterfall, and the scheduler-rescue policy swap."""
+import dataclasses
+import math
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:     # property tests skip, the rest still run
+    from tests._hypothesis_fallback import given, settings, st
+
+from repro.core.attribution import AttributionWaterfall
+from repro.fleet.controller import (AdaptiveController, ControllerConfig,
+                                    Signals)
+from repro.fleet.policies import NAIVE_COMBO, PAPER_COMBO
+from repro.fleet.scenarios import (GOLDEN_KNOBS, GOLDEN_SIZE_MIX, SCENARIOS,
+                                   build_sim)
+
+ENGINES = ("reference", "vectorized")
+
+
+def _controlled(preset: str, engine: str, **kw):
+    ctrl = AdaptiveController()
+    sim = build_sim(SCENARIOS[preset], size_mix=GOLDEN_SIZE_MIX,
+                    engine=engine, controller=ctrl,
+                    **{**GOLDEN_KNOBS, **kw})
+    sim.run()
+    return sim, ctrl
+
+
+# ---------------------------------------------------------------------------
+# cross-engine equivalence under live control
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("preset", ("failure_storm", "peak_week",
+                                    "maintenance"))
+def test_controlled_run_identical_across_engines(preset):
+    """A controlled run — including mid-run policy flips, evictions, and
+    Daly retunes — streams bit-identical ledger totals and takes the
+    identical switch sequence on both engines."""
+    runs = {}
+    for engine in ENGINES:
+        sim, ctrl = _controlled(preset, engine)
+        runs[engine] = (sim.ledger.totals(), ctrl.switches)
+    assert runs["reference"][0] == runs["vectorized"][0]
+    assert runs["reference"][1] == runs["vectorized"][1]
+
+
+def test_controller_acts_on_failure_storm():
+    sim, ctrl = _controlled("failure_storm", "vectorized")
+    assert ctrl.switches, "storm preset must trigger at least one switch"
+    assert ctrl.switches[0]["rule"] == "failure_storm"
+    assert ctrl.mode in ("survival", "baseline")
+
+
+# ---------------------------------------------------------------------------
+# no evidence, no switches
+# ---------------------------------------------------------------------------
+
+def test_no_faults_never_switches():
+    """On the steady preset with failures effectively disabled there is
+    no storm, maintenance, queue, or gang evidence — the controller must
+    hold the baseline for the whole run on both engines."""
+    quiet = dataclasses.replace(SCENARIOS["steady"], mtbf_factor=1e9)
+    for engine in ENGINES:
+        ctrl = AdaptiveController()
+        sim = build_sim(quiet, size_mix=GOLDEN_SIZE_MIX, engine=engine,
+                        controller=ctrl, **GOLDEN_KNOBS)
+        sim.run()
+        assert ctrl.switches == []
+        assert ctrl.mode == "baseline"
+
+
+# ---------------------------------------------------------------------------
+# switch overhead is visible in the waterfall
+# ---------------------------------------------------------------------------
+
+def test_switch_overhead_lands_in_policy_switch_bucket():
+    sim, ctrl = _controlled("failure_storm", "vectorized")
+    buckets = ctrl.waterfall.bucket_totals()
+    cfg = ctrl.cfg
+    expect = len(ctrl.switches) * cfg.switch_cost_s * cfg.switch_chips
+    assert ctrl.switches
+    assert buckets["policy_switch"] == pytest.approx(expect)
+    ctrl.waterfall.assert_conserves(sim.ledger)
+
+
+# ---------------------------------------------------------------------------
+# scheduler rescue: naive live policies get swapped to the paper combo
+# ---------------------------------------------------------------------------
+
+def test_scheduler_rescue_swaps_to_paper_combo():
+    saturated = dataclasses.replace(SCENARIOS["steady"], target_load=1.5)
+    runs = {}
+    for engine in ENGINES:
+        ctrl = AdaptiveController()
+        sim = build_sim(saturated, size_mix=GOLDEN_SIZE_MIX, engine=engine,
+                        controller=ctrl, **{**GOLDEN_KNOBS, **NAIVE_COMBO})
+        sim.run()
+        rules = [s["rule"] for s in ctrl.switches]
+        assert "scheduler_rescue" in rules
+        assert sim.placement.name == PAPER_COMBO["placement"]
+        assert sim.preemption.name == PAPER_COMBO["preemption"]
+        assert sim.defrag.name == PAPER_COMBO["defrag"]
+        runs[engine] = (sim.ledger.totals(), ctrl.switches)
+    assert runs["reference"] == runs["vectorized"]
+
+
+# ---------------------------------------------------------------------------
+# decision-core safety properties (synthetic Signals, no sim)
+# ---------------------------------------------------------------------------
+
+def _signal(t, **kw):
+    base = dict(t=t, failures_delta=0, expected_failures=0.05,
+                cum_rate_x=0.0, rollback_frac=0.0, gang_waiting=0,
+                maintenance=False, queue_frac=0.0, paper_policies=True,
+                sg=0.9, mpg=0.5)
+    base.update(kw)
+    return Signals(**base)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(
+    st.tuples(st.floats(min_value=1.0, max_value=7200.0),
+              st.integers(min_value=0, max_value=40),
+              st.floats(min_value=0.0, max_value=0.6),
+              st.booleans(),
+              st.integers(min_value=0, max_value=5)),
+    min_size=1, max_size=60))
+def test_cooldown_never_allows_two_switches_within_window(steps):
+    """However hostile the signal stream, accepted switches are at least
+    ``cooldown_s`` apart — the anti-thrash guarantee is structural, not
+    a property of friendly inputs."""
+    ctrl = AdaptiveController()
+    t = 0.0
+    for dt, fails, rollback, maint, gangs in steps:
+        t += dt
+        ctrl._consider(_signal(t, failures_delta=fails,
+                               rollback_frac=rollback, maintenance=maint,
+                               gang_waiting=gangs,
+                               cum_rate_x=fails * 3.0))
+    times = [s["t"] for s in ctrl.switches]
+    assert all(b - a >= ctrl.cfg.cooldown_s
+               for a, b in zip(times, times[1:]))
+
+
+def test_cooldown_holds_under_seeded_hostile_stream():
+    """Deterministic mirror of the hypothesis property (runs even
+    without hypothesis installed): 500 seeded hostile boundaries, every
+    accepted pair of switches at least a cooldown apart."""
+    import random
+    rng = random.Random(20260809)
+    ctrl = AdaptiveController()
+    t = 0.0
+    for _ in range(500):
+        t += rng.uniform(60.0, 5400.0)
+        ctrl._consider(_signal(
+            t, failures_delta=rng.randrange(0, 30),
+            rollback_frac=rng.uniform(0.0, 0.5),
+            maintenance=rng.random() < 0.3,
+            gang_waiting=rng.randrange(0, 4),
+            cum_rate_x=rng.uniform(0.0, 8.0)))
+    times = [s["t"] for s in ctrl.switches]
+    assert times, "hostile stream must trigger switches"
+    assert all(b - a >= ctrl.cfg.cooldown_s
+               for a, b in zip(times, times[1:]))
+
+
+def test_quiet_signals_propose_nothing():
+    ctrl = AdaptiveController()
+    for i in range(1, 50):
+        assert ctrl._consider(_signal(3600.0 * i)) is None
+    assert ctrl.switches == [] and ctrl.mode == "baseline"
+
+
+def test_storm_then_calm_round_trip():
+    """Entry on a mass-failure boundary, exit only after the configured
+    number of calm boundaries — and re-entry still honors the cooldown."""
+    cfg = ControllerConfig(cooldown_s=0.0)
+    ctrl = AdaptiveController(cfg)
+    a = ctrl._consider(_signal(3600.0, failures_delta=10, cum_rate_x=5.0))
+    assert a is not None and ctrl.mode == "survival"
+    # one calm boundary is not enough (calm_boundaries=2)
+    assert ctrl._consider(_signal(7200.0)) is None
+    exit_ = ctrl._consider(_signal(10800.0))
+    assert exit_ is not None and exit_.rule == "calm_restore"
+    assert ctrl.mode == "baseline"
+
+
+def test_calm_exit_vetoed_while_cumulative_rate_high():
+    """A degraded fleet (cum observed rate >> nominal) never looks calm,
+    no matter how quiet one boundary is."""
+    cfg = ControllerConfig(cooldown_s=0.0)
+    ctrl = AdaptiveController(cfg)
+    ctrl._consider(_signal(3600.0, failures_delta=10, cum_rate_x=5.0))
+    assert ctrl.mode == "survival"
+    for i in range(2, 12):
+        ctrl._consider(_signal(3600.0 * i, cum_rate_x=4.0))
+    assert ctrl.mode == "survival"
+
+
+# ---------------------------------------------------------------------------
+# config validation and binding
+# ---------------------------------------------------------------------------
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="windows_per_decision"):
+        ControllerConfig(windows_per_decision=0)
+    with pytest.raises(ValueError, match="cooldown_s"):
+        ControllerConfig(cooldown_s=-1.0)
+    with pytest.raises(ValueError, match="hysteresis"):
+        ControllerConfig(calm_rollback_frac=0.5, storm_rollback_frac=0.2)
+
+
+def test_double_bind_rejected():
+    ctrl = AdaptiveController()
+    sim = build_sim(SCENARIOS["steady"], size_mix=GOLDEN_SIZE_MIX,
+                    controller=ctrl, **GOLDEN_KNOBS)
+    with pytest.raises(ValueError, match="already bound"):
+        ctrl.bind(sim)
+
+
+def test_initial_state():
+    ctrl = AdaptiveController()
+    assert ctrl.mode == "baseline"
+    assert ctrl.switches == []
+    assert ctrl._last_switch_t == -math.inf

@@ -9,6 +9,7 @@ preempted out of a full cluster restarts on half its slice instead of
 waiting for the full shape.
 """
 import dataclasses
+import random
 
 import pytest
 
@@ -16,12 +17,20 @@ from repro.core.goodput import LOSS_BUCKETS, Layer, Phase
 from repro.fleet.job import JobSpec
 from repro.fleet.scenarios import (GOLDEN_KNOBS, GOLDEN_SIZE_MIX, SCENARIOS,
                                    FailureBurst, Scenario, build_sim)
-from repro.fleet.sim import FleetSim, SimConfig
+from repro.fleet.sim import REPAIR_LOGNORMAL, FleetSim, SimConfig
 from repro.parallel.reshard import reshard_seconds
 
 ENGINES = ("reference", "vectorized")
 
 NO_FAILURES = 1e15          # chip_mtbf high enough that no segment fails
+
+
+def _first_repair_s(seed: int, scale: float, gen: str = "tpu-v5e") -> float:
+    """The first repair window a seed-``seed`` sim draws: ``scale`` times
+    the generation's lognormal multiplier, first draw on the dedicated
+    ``{seed}:repair`` stream (the sim's exact sampling recipe)."""
+    rng = random.Random(f"{seed}:repair")
+    return scale * rng.lognormvariate(*REPAIR_LOGNORMAL[gen])
 
 
 def _elastic_preempt_sim(engine, **kw):
@@ -217,7 +226,8 @@ def test_slice_repair_s_validated():
 def test_repair_window_stalls_rigid_gang_exactly(engine):
     """On a full pod there is no spare capacity: a rigid gang's
     replacement slice only exists once the dead slice's chips come back
-    from repair — the gang_stall duration IS the repair window."""
+    from repair — the gang_stall duration IS the (sampled) repair
+    window."""
     cfg = SimConfig(n_pods=1, pod_size=8, horizon=40_000.0, seed=0,
                     chip_mtbf=NO_FAILURES, engine=engine,
                     slice_repair_s=3_600.0, scenario=_one_burst())
@@ -228,16 +238,17 @@ def test_repair_window_stalls_rigid_gang_exactly(engine):
     gang = sim.jobs["gang"]
     assert gang.failures == 1
     assert gang.spec.chips == 8 and gang.spec.n_slices == 2
+    repair_done = 20_000.0 + _first_repair_s(seed=0, scale=3_600.0)
     stall = [i for i in sim.intervals
              if i.job_id == "gang" and i.phase is Phase.IDLE]
     assert len(stall) == 1
     assert stall[0].t0 == pytest.approx(20_000.0)          # the burst
-    assert stall[0].t1 == pytest.approx(23_600.0)          # repair done
+    assert stall[0].t1 == pytest.approx(repair_done)       # repair done
     assert LOSS_BUCKETS[(Phase.IDLE, Layer.HARDWARE)] == "gang_stall"
     # full-width STEPs resume after the refill
     after = [i for i in sim.intervals
              if i.job_id == "gang" and i.phase is Phase.STEP
-             and i.t0 >= 23_600.0]
+             and i.t0 >= repair_done - 1e-6]
     assert after and all(i.chips == 8 for i in after)
 
 
@@ -262,11 +273,13 @@ def test_repair_window_elastic_regrows_when_repair_completes(engine):
     assert len(reshard) == 2                   # 8->4 down, 4->8 back up
     assert reshard[0][1] == pytest.approx(reshard_seconds("smollm-135m", 8, 4))
     assert reshard[1][1] == pytest.approx(reshard_seconds("smollm-135m", 4, 8))
-    # degraded STEPs span the repair window; full width resumes after
+    # degraded STEPs span the sampled repair window; full width resumes
+    # after the chips return
+    repair_done = 20_000.0 + _first_repair_s(seed=0, scale=3_600.0)
     degraded = [i for i in sim.intervals
                 if i.job_id == "gang" and i.phase is Phase.STEP
                 and i.chips == 4]
-    assert degraded and all(20_000.0 <= i.t0 <= 23_600.0 + 1e-6
+    assert degraded and all(20_000.0 <= i.t0 <= repair_done + 1e-6
                             for i in degraded)
 
 

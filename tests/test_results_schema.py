@@ -308,6 +308,102 @@ def test_committed_resilience_bench_shows_elastic_recovery():
             {"elastic_resize", "multi_slice_gang"}
 
 
+CONTROLLER_ARM = {
+    **GOODPUT_ROW,
+    "failures": int,
+    "lost_by_layer": each_value(non_negative),
+    "wall_s": non_negative,
+}
+
+CONTROLLER_PRESET = {
+    "rigid": CONTROLLER_ARM,
+    "elastic": CONTROLLER_ARM,
+    "controlled": {**CONTROLLER_ARM,
+                   "switches": list,
+                   "policy_switch_chip_time": non_negative},
+    "oracle_static": lambda x: x in ("rigid", "elastic"),
+    "best_static_mpg": unit,
+    "regret_mpg": float,
+    "recovered_by_layer": dict,
+}
+
+CONTROLLER_SECTION = {
+    "config": {"n_jobs": positive, "seed": int, "n_pods": positive,
+               "pod_size": positive, "horizon_days": positive,
+               "slice_repair_s": positive, "target_load": positive},
+    "config_fingerprint": str,
+    "summary": {
+        "avg_mpg": {"rigid": unit, "elastic": unit, "controlled": unit},
+        "best_static_arm": lambda x: x in ("rigid", "elastic"),
+        "controller_beats_best_static_avg": lambda x: isinstance(x, bool),
+        "max_regret_mpg": float,
+    },
+}
+
+ADVERSARIAL_ROW = {
+    "name": str,
+    "genome": dict,
+    "controlled_mpg": unit,
+    "rigid_mpg": unit,
+    "elastic_mpg": unit,
+    "best_static_mpg": unit,
+    "controller_survives": lambda x: isinstance(x, bool),
+    "n_switches": non_negative,
+}
+
+
+def test_committed_controller_bench_passes_the_acceptance_gates():
+    """PR acceptance on the committed BENCH_controller.json: (a) regret
+    vs the per-preset best static policy <= 5% MPG on all 7 presets in
+    every section, (b) the controlled average strictly above the best
+    single static arm's average, and (c) the controller surviving every
+    adversarially-searched scenario at or above the best static's MPG —
+    with switch overhead attributed and cross-engine equivalence pinned
+    in the tiny section."""
+    path = REPO_ROOT / "BENCH_controller.json"
+    if not path.exists():
+        pytest.skip("BENCH_controller.json not committed in this checkout")
+    bench = json.loads(path.read_text())
+    sections = {k: v for k, v in bench.items()
+                if isinstance(v, dict) and "summary" in v}
+    assert "tiny" in sections
+    presets = ("steady", "diurnal", "bursty", "maintenance",
+               "failure_storm", "hetero_fleet", "peak_week")
+    for name, section in sections.items():
+        problems = check(section, CONTROLLER_SECTION,
+                         f"BENCH_controller.{name}")
+        for preset in presets:
+            problems += check(section[preset], CONTROLLER_PRESET,
+                              f"BENCH_controller.{name}.{preset}")
+        assert not problems, "\n".join(problems)
+        for preset in presets:
+            p = section[preset]
+            # gate (a): bounded regret vs the per-scenario oracle
+            assert p["regret_mpg"] <= 0.05, (name, preset)
+            assert p["best_static_mpg"] == \
+                max(p["rigid"]["MPG"], p["elastic"]["MPG"])
+        # gate (b): adapting beats committing to one static policy
+        summary = section["summary"]
+        assert summary["controller_beats_best_static_avg"] is True, name
+        best = summary["avg_mpg"][summary["best_static_arm"]]
+        assert summary["avg_mpg"]["controlled"] > best, name
+    # controlled runs are bit-identical across engines (tiny section)
+    for preset in presets:
+        assert bench["tiny"][preset]["equivalence"]["engines_identical"]
+    # gate (c): the committed adversarial suite never drives the
+    # controller below the best static floor
+    adv = bench["adversarial"]
+    assert len(adv["suite"]) >= 3
+    for row in adv["suite"]:
+        problems = check(row, ADVERSARIAL_ROW,
+                         f"BENCH_controller.adversarial.{row.get('name')}")
+        assert not problems, "\n".join(problems)
+        assert row["controller_survives"] is True, row["name"]
+        assert row["controlled_mpg"] >= row["best_static_mpg"], row["name"]
+        assert row["best_static_mpg"] == \
+            max(row["rigid_mpg"], row["elastic_mpg"])
+
+
 def test_scenario_sweep_covers_the_acceptance_matrix():
     """PR acceptance: >= 6 scenarios x 3 policy combos in the artifact."""
     path = RESULTS / "scenario_sweep.json"
