@@ -1,0 +1,151 @@
+"""Paged-decode microbenchmark: batch width x sequence length sweep of
+per-slot batch-1 decode vs one batched paged-attention decode step
+(``results/serve/paged_decode.json``).
+
+Isolates the decode step itself — no engine, no admission — so the
+numbers answer exactly one question: at width ``w`` and resident length
+``s``, what does replacing ``w`` batch-1 ``decode_step`` dispatches with
+ONE ``paged_decode_step`` at width ``w`` buy?  Both arms are jitted
+once per sweep point and timed over a data-dependent call chain
+(each step's argmax token feeds the next) with a single device sync at
+the end, mirroring the serving loop's one-sync-per-iteration contract.
+
+``attn_impl="ref"`` (the XLA gather path) keeps the sweep honest on
+CPU; the Pallas kernel's interpret mode is a correctness vehicle, not a
+performance one, and on TPU ``attn_impl="auto"`` selects the kernel.
+
+Needs JAX; prints a skip note and writes nothing when it is missing
+(the numpy-only benchmark CI jobs).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List
+
+from benchmarks.common import emit, save_json
+
+ARCH = "smollm-135m"
+
+QUICK = {"widths": [1, 4], "seq_lens": [128], "iters": 10}
+FULL = {"widths": [1, 2, 4, 8], "seq_lens": [128, 256], "iters": 30}
+
+
+def _sweep_point(cfg, params, width: int, seq_len: int, iters: int) -> Dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import model, transformer
+    from repro.serve.kv_cache import FLASH_ATTENTION_BLOCK_K
+
+    bt = FLASH_ATTENTION_BLOCK_K
+    nb = -(-seq_len // bt)
+    tok0 = jnp.zeros((width,), jnp.int32)
+
+    # --- per-slot arm: width sequential batch-1 decode dispatches -------
+    dec = jax.jit(model.decode_fn(cfg))
+    caches = []
+    for _ in range(width):
+        c = model.init_cache(cfg, 1, seq_len)
+        c["pos"] = jnp.full((1,), seq_len - 1, jnp.int32)
+        caches.append(c)
+
+    def per_slot_round(toks):
+        out = []
+        for i in range(width):
+            logits, caches[i] = dec(params, toks[i][None], caches[i])
+            out.append(jnp.argmax(logits, -1)[0].astype(jnp.int32))
+        return jnp.stack(out)
+
+    toks = tok0
+    per_slot_round(toks)                      # compile
+    jax.block_until_ready(toks)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        toks = per_slot_round(toks)
+    jax.block_until_ready(toks)
+    per_slot_s = time.perf_counter() - t0
+
+    # --- batched arm: one paged decode step at full width ---------------
+    n_pages = width * nb + 1
+    kp = jnp.zeros(transformer.paged_kv_shape(cfg, n_pages, bt),
+                   cfg.compute_dtype)
+    vp = jnp.zeros_like(kp)
+    tables = jnp.arange(width * nb, dtype=jnp.int32).reshape(width, nb)
+    lens = jnp.full((width,), seq_len, jnp.int32)
+    step = jax.jit(
+        lambda p, t, ln, k, v, b: model.paged_decode_fn(
+            cfg, attn_impl="ref")(p, t, ln, k, v, b),
+        donate_argnums=(3, 4))
+
+    def batched_round(toks, kp, vp):
+        logits, kp, vp = step(params, toks, lens, kp, vp, tables)
+        return jnp.argmax(logits, -1).astype(jnp.int32), kp, vp
+
+    toks, kp, vp = batched_round(tok0, kp, vp)     # compile
+    jax.block_until_ready(toks)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        toks, kp, vp = batched_round(toks, kp, vp)
+    jax.block_until_ready(toks)
+    batched_s = time.perf_counter() - t0
+
+    per_tps = width * iters / max(per_slot_s, 1e-12)
+    bat_tps = width * iters / max(batched_s, 1e-12)
+    return {
+        "width": width, "seq_len": seq_len, "iters": iters,
+        "per_slot_tokens_per_s": round(per_tps, 1),
+        "batched_tokens_per_s": round(bat_tps, 1),
+        "ratio": round(bat_tps / max(per_tps, 1e-12), 3),
+    }
+
+
+def main(quick: bool = True) -> Dict:
+    try:
+        import jax  # noqa: F401
+    except ModuleNotFoundError:
+        print("paged_decode,0.0,"
+              '{"skipped": "jax unavailable in this environment"}')
+        return {}
+    from repro.configs import get_smoke
+    from repro.models import model
+    from repro.serve.kv_cache import FLASH_ATTENTION_BLOCK_K
+
+    preset = QUICK if quick else FULL
+    cfg = get_smoke(ARCH)
+    params = model.init_params(cfg, jax.random.key(0))
+    t_start = time.monotonic()
+    sweep: List[Dict] = []
+    for s in preset["seq_lens"]:
+        for w in preset["widths"]:
+            sweep.append(_sweep_point(cfg, params, w, s, preset["iters"]))
+    wide = [p for p in sweep if p["width"] >= 4]
+    out = {
+        "arch": f"{ARCH} (smoke)",
+        "attn_impl": "ref",
+        "block_tokens": FLASH_ATTENTION_BLOCK_K,
+        "quick": quick,
+        "sweep": sweep,
+        "checks": {
+            "n_points": len(sweep),
+            "batched_wins_at_width_ge_4":
+                bool(wide) and all(p["ratio"] > 1.0 for p in wide),
+        },
+    }
+    save_json("serve/paged_decode.json", out)
+    wall_us = (time.monotonic() - t_start) * 1e6
+    emit("paged_decode", wall_us, {
+        "n_points": len(sweep),
+        "max_ratio": max(p["ratio"] for p in sweep),
+        "batched_wins_at_width_ge_4":
+            out["checks"]["batched_wins_at_width_ge_4"],
+    })
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="full width x seq-length sweep (slower)")
+    args = ap.parse_args()
+    main(quick=not args.full)

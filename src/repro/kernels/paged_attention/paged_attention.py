@@ -1,0 +1,155 @@
+"""Paged-attention decode TPU kernel (pl.pallas_call + scalar-prefetch
+block tables): one decode step for a batch of live slots whose KV lives
+in the :class:`repro.serve.kv_cache.PagedKVCache` allocator's block
+tables instead of a dense per-slot cache.
+
+Block-table ABI (shared with ``PagedKVCache``)
+----------------------------------------------
+The serving KV cache is a pool of fixed-size *pages* of ``block_tokens``
+token slots per kv head:
+
+    k_pages, v_pages : (hkv, n_pages, block_tokens, head_dim)
+
+A slot's tokens occupy the pages named by its *block table* row, in
+order: absolute position ``p`` of slot ``b`` lives in page
+``block_tables[b, p // block_tokens]`` at in-page offset
+``p % block_tokens``.  ``lengths[b]`` is the number of valid positions
+(attention span) for slot ``b``; rows past their table's populated
+prefix may point anywhere (conventionally a null page) — they are never
+read because the length mask excludes them.  ``lengths[b] == 0`` marks
+an *inactive* batch row: the kernel skips every page and writes zeros,
+which is what lets a fixed-width batched executor mask empty rows
+instead of recompiling at a new width.
+
+``block_tokens`` is read off the page pool's shape and **is** the
+kernel's kv tile: each grid step DMAs exactly one
+``(block_tokens, head_dim)`` page into VMEM, so allocator blocks map
+1:1 onto kernel ``block_k`` grid iterations with no partial-tile waste.
+The allocator's default (``FLASH_ATTENTION_BLOCK_K`` = 128, the Pallas
+flash-attention kv tile) keeps both kernels fed whole MXU-aligned
+tiles; a pin test holds the two constants equal.
+
+TPU adaptation notes: the page gather is a *data-dependent* BlockSpec —
+``pltpu.PrefetchScalarGridSpec`` prefetches the block table and length
+vectors into SMEM so the k/v index maps can address
+``k_pages[ih, block_tables[ib, ik]]`` per grid step; the kv-page loop is
+the innermost grid dimension (TPU grids iterate sequentially, so the
+online-softmax running max/denominator live in VMEM scratch across
+pages); pages wholly past ``lengths[ib]`` skip their FLOPs with
+``pl.when`` but still run their grid step, keeping the grid static.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+# The kernel's kv tile == the serve allocator's default page size ==
+# the flash-attention kernel's block_k (pinned against each other and
+# against repro.serve.kv_cache.FLASH_ATTENTION_BLOCK_K by test).
+DEFAULT_BLOCK_TOKENS = 128
+
+
+def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+            m_scr, l_scr, acc_scr, *,
+            scale: float, block_tokens: int, window: int):
+    ib = pl.program_id(0)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[ib]
+
+    # Pages at or past the valid span contribute nothing — skip their
+    # FLOPs entirely.  (This also keeps zero-length rows from ever
+    # touching the scratch, so inactive rows finish with l == 0 and the
+    # epilogue emits exact zeros instead of a softmax over masked junk.)
+    @pl.when(ik * block_tokens < length)
+    def _accumulate():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (g, d)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bt, d)
+        v = v_ref[0, 0].astype(jnp.float32)                  # (bt, d)
+
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (g, bt)
+
+        kv_pos = ik * block_tokens + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        mask = kv_pos < length
+        if window > 0:
+            # the (single) query sits at absolute position length - 1
+            mask &= kv_pos > (length - 1 - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                                   # (g, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                                # (g, bt)
+        alpha = jnp.exp(m_prev - m_new)                       # (g, 1)
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                    window: int = 0, interpret: bool = False):
+    """One-token paged attention for a batch of slots.
+
+    q: (b, hq, d) — one query token per slot; k_pages, v_pages:
+    (hkv, n_pages, block_tokens, d); block_tables: (b, nb) int32;
+    lengths: (b,) int32 valid positions per slot (0 = inactive row,
+    output zeros).  hq % hkv == 0 (GQA).  Returns (b, hq, d) in
+    q.dtype; softmax/accumulation in fp32.
+    """
+    b, hq, d = q.shape
+    hkv, n_pages, block_tokens, _ = k_pages.shape
+    assert hq % hkv == 0
+    g = hq // hkv
+    nb = block_tables.shape[1]
+    qg = q.reshape(b, hkv, g, d)
+
+    kernel = functools.partial(_kernel, scale=d ** -0.5,
+                               block_tokens=block_tokens, window=window)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d),
+                         lambda ib, ih, ik, bt, ln: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, 1, block_tokens, d),
+                         lambda ib, ih, ik, bt, ln: (ih, bt[ib, ik], 0, 0)),
+            pl.BlockSpec((1, 1, block_tokens, d),
+                         lambda ib, ih, ik, bt, ln: (ih, bt[ib, ik], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda ib, ih, ik, bt, ln: (ib, ih, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      qg, k_pages, v_pages)
+    return out.reshape(b, hq, d)

@@ -8,9 +8,13 @@ Two engines share one accounting contract (``repro.core.ledger``):
 
   * ``--engine continuous`` (default): the production path —
     ``repro.serve.ContinuousServeEngine`` driving the real model through
-    a per-slot executor (``repro.serve.jax_executor``), with per-
-    iteration admission, immediate detach, a paged KV-cache allocator,
-    and a latency SLO whose breaches book as scheduling-layer losses;
+    the batched paged-decode executor
+    (``repro.serve.batched_executor``, one jitted decode over the
+    allocator's block tables) or the per-slot fallback
+    (``repro.serve.jax_executor``, ``--executor slot`` or families that
+    resist paging), with per-iteration admission, immediate detach, a
+    paged KV-cache allocator, and a latency SLO whose breaches book as
+    scheduling-layer losses;
   * ``--engine static``: the legacy fixed-group batch loop (``Server``
     below), kept as the measured baseline the A/B benchmarks compare
     against.
@@ -263,22 +267,39 @@ def run_continuous_server(cfg, reqs: List[Request], batch: int,
                           max_new: int, prompt_len: int,
                           slo_ttft: float, slo_tpot: float,
                           kv_block_tokens: int = 0,
-                          clock: Callable[[], float] = time.monotonic
-                          ) -> dict:
-    """Drive the continuous engine over the real model (per-slot
-    executor) and return its ServeReport dict."""
+                          clock: Callable[[], float] = time.monotonic,
+                          executor_kind: str = "auto") -> dict:
+    """Drive the continuous engine over the real model and return its
+    ServeReport dict.  ``executor_kind``: "batched" decodes every live
+    slot in one jitted call over the paged KV pool, "slot" runs the
+    per-slot batch-1 fallback, "auto" picks batched when the family
+    supports paged decode."""
+    from repro.models import model as _model
     from repro.serve import (ContinuousServeEngine, PagedKVCache,
                              ServeRequest, ServeSLO)
-    from repro.serve.jax_executor import JaxSlotExecutor
 
     slo = ServeSLO(ttft=slo_ttft if slo_ttft > 0 else float("inf"),
                    tpot=slo_tpot if slo_tpot > 0 else float("inf"))
-    block_tokens = kv_block_tokens or min(128, prompt_len + max_new)
-    need_blocks = -(-(prompt_len + max_new) // block_tokens)
-    kv = PagedKVCache(n_blocks=batch * need_blocks,
-                      block_tokens=block_tokens)
-    executor = JaxSlotExecutor(cfg, max_len=prompt_len + max_new,
-                               clock=clock)
+    max_len = prompt_len + max_new
+    use_batched = executor_kind == "batched" or (
+        executor_kind == "auto"
+        and _model.supports_paged_decode(cfg, max_len))
+    if use_batched:
+        from repro.serve.batched_executor import JaxBatchedExecutor
+
+        # the batched executor's allocator IS the engine's kv cache
+        # (block_tokens pinned to the kernel kv tile, so kv_block_tokens
+        # is ignored on this path)
+        executor = JaxBatchedExecutor(cfg, max_len, batch, clock=clock)
+        kv = executor.kv
+    else:
+        from repro.serve.jax_executor import JaxSlotExecutor
+
+        block_tokens = kv_block_tokens or min(128, prompt_len + max_new)
+        need_blocks = -(-(prompt_len + max_new) // block_tokens)
+        kv = PagedKVCache(n_blocks=batch * need_blocks,
+                          block_tokens=block_tokens)
+        executor = JaxSlotExecutor(cfg, max_len=max_len, clock=clock)
     engine = ContinuousServeEngine(batch, executor, slo=slo, kv_cache=kv,
                                    ledger=GoodputLedger(window=60.0),
                                    arch=cfg.name)
@@ -315,6 +336,11 @@ def main(argv=None):
                     choices=("uniform", "diurnal", "bursty"),
                     help="arrival modulation over --span (the fleet "
                          "scenario processes, repro.fleet.scenarios)")
+    ap.add_argument("--executor", default="auto",
+                    choices=("auto", "batched", "slot"),
+                    help="continuous-engine executor: one jitted batched "
+                         "paged decode vs per-slot batch-1 (auto picks "
+                         "batched when the family supports paged decode)")
     ap.add_argument("--slo-ttft", type=float, default=0.0,
                     help="time-to-first-token SLO in seconds (0 = none)")
     ap.add_argument("--slo-tpot", type=float, default=0.0,
@@ -351,7 +377,8 @@ def main(argv=None):
     if args.engine == "continuous":
         out = run_continuous_server(
             cfg, reqs, args.batch, args.max_new, args.prompt_len,
-            slo_ttft=args.slo_ttft, slo_tpot=args.slo_tpot, clock=clock)
+            slo_ttft=args.slo_ttft, slo_tpot=args.slo_tpot, clock=clock,
+            executor_kind=args.executor)
     else:
         _, out = run_static_server(cfg, reqs, args.batch, args.max_new,
                                    args.prompt_len, clock=clock)

@@ -125,15 +125,24 @@ def decode_attention(q, k_cache, v_cache, n_valid) -> jax.Array:
     """One-token attention against a cache.
 
     q: (b, 1, hq, hd); caches: (b, S, hkv, hd) with `n_valid` filled slots.
-    Cache slot order is irrelevant (keys stored post-RoPE), so ring-buffer
-    rotation needs no unpermute.
+    `n_valid` may be a scalar (shared position, legacy batch-1 decode) or a
+    (b,) vector (per-slot positions, the batched serve path — rows with
+    ``n_valid == 0`` attend to nothing and emit zeros through the softmax
+    epsilon).  Cache slot order is irrelevant (keys stored post-RoPE), so
+    ring-buffer rotation needs no unpermute.
     """
     b, _, hq, hd = q.shape
     hkv = k_cache.shape[2]
     g = hq // hkv
     qg = (q * hd ** -0.5).reshape(b, 1, hkv, g, hd)
     scores = _grouped_scores(qg, k_cache)            # (b, hkv, g, 1, S)
-    mask = (jnp.arange(k_cache.shape[1]) < n_valid)[None, None, None, None, :]
+    S = k_cache.shape[1]
+    n_valid = jnp.asarray(n_valid)
+    if n_valid.ndim == 0:
+        mask = (jnp.arange(S) < n_valid)[None, None, None, None, :]
+    else:
+        mask = (jnp.arange(S)[None, :] <
+                n_valid[:, None])[:, None, None, None, :]
     probs = _softmax(scores, mask)
     out = _apply_probs(probs, v_cache).astype(q.dtype)
     return out.reshape(b, 1, hq, hd)
@@ -189,19 +198,33 @@ def cross_attention(x, p, cfg: ModelConfig, k, v):
 
 def decode_self_attention(x, p, cfg: ModelConfig, cache, layer_cache_idx=None,
                           use_rope=True):
-    """x: (b, 1, d).  cache: dict with k/v (b, S, hkv, hd), pos (scalar int32).
+    """x: (b, 1, d).  cache: dict with k/v (b, S, hkv, hd), pos (scalar int32
+    shared across the batch, or a (b,) per-slot position vector).
 
     Writes the new kv at slot pos % S (ring buffer for windowed caches) and
-    attends over min(pos + 1, S) valid slots.
+    attends over min(pos + 1, S) valid slots — per row when pos is a vector
+    (slot `b` writes at pos[b] % S), which is what lets a fixed-width batched
+    executor decode mixed-length requests in one call.
     """
     b = x.shape[0]
-    pos = cache["pos"]
-    positions = jnp.full((b, 1), pos, jnp.int32)
-    q, k, v = project_qkv(x, p, cfg, positions, use_rope)
-    slot = pos % cache["k"].shape[1]
-    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
-    n_valid = jnp.minimum(pos + 1, k_cache.shape[1])
+    S = cache["k"].shape[1]
+    pos = jnp.asarray(cache["pos"])
+    if pos.ndim == 0:
+        positions = jnp.full((b, 1), pos, jnp.int32)
+        q, k, v = project_qkv(x, p, cfg, positions, use_rope)
+        slot = pos % S
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+    else:
+        positions = pos[:, None].astype(jnp.int32)
+        q, k, v = project_qkv(x, p, cfg, positions, use_rope)
+        # one-hot masked write: row b lands at its own slot pos[b] % S
+        oh = (jnp.arange(S)[None, :] == (pos % S)[:, None])[:, :, None, None]
+        k_cache = jnp.where(oh, k.astype(cache["k"].dtype), cache["k"])
+        v_cache = jnp.where(oh, v.astype(cache["v"].dtype), cache["v"])
+    n_valid = jnp.minimum(pos + 1, S)
     o = decode_attention(q, k_cache, v_cache, n_valid)
     new_cache = {"k": k_cache, "v": v_cache, "pos": pos}
     return merge_heads_out(o, p), new_cache

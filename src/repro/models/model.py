@@ -41,6 +41,28 @@ def init_cache(cfg: ModelConfig, batch: int, seq_len: int, abstract=False):
     return transformer.init_cache(cfg, batch, seq_len, abstract)
 
 
+def supports_paged_decode(cfg: ModelConfig, max_len: int) -> bool:
+    """Whether the batched paged-decode path can serve this config.
+
+    dense/moe decoder caches page cleanly; hybrid/ssm carry recurrent
+    states and encdec/vlm carry encoder context the block tables don't
+    model, so those families fall back to the per-slot executor.  A
+    sliding window narrower than ``max_len`` trims the prefill cache
+    below full positional coverage, which the page scatter needs.
+    """
+    if cfg.family not in ("dense", "moe"):
+        return False
+    return cfg.attention_window == 0 or cfg.attention_window >= max_len
+
+
+def paged_decode_fn(cfg: ModelConfig, attn_impl: str = "auto",
+                    interpret: bool = False) -> Callable:
+    """f(params, token, lengths, k_pages, v_pages, block_tables) ->
+    (logits, k_pages, v_pages) — see transformer.paged_decode_step."""
+    return lambda p, t, ln, kp, vp, bt: transformer.paged_decode_step(
+        p, t, ln, kp, vp, bt, cfg, attn_impl=attn_impl, interpret=interpret)
+
+
 def input_specs(cfg: ModelConfig, shape: ShapeConfig,
                 abstract: bool = True) -> Dict[str, Any]:
     """Abstract (ShapeDtypeStruct) model inputs for one assignment cell."""

@@ -276,12 +276,18 @@ def prefill(params, batch, cfg: ModelConfig, max_len: int = 0):
     x, _, caches = run_stack(x, params, cfg, collect_caches=True)
     x = norm(x, params, "final_norm", cfg)
     logits = lm_logits(x[:, -1:], params, cfg)[:, 0]
-    cache = _caches_to_decode_cache(caches, cfg, seq, max_len)
+    cache = _caches_to_decode_cache(caches, cfg, seq, max_len, x.shape[0])
     return logits, cache
 
 
-def _caches_to_decode_cache(caches, cfg: ModelConfig, seq: int, max_len: int):
-    """Convert prefill-collected kv/state into the decode cache layout."""
+def _caches_to_decode_cache(caches, cfg: ModelConfig, seq: int, max_len: int,
+                            batch: int):
+    """Convert prefill-collected kv/state into the decode cache layout.
+
+    The cache carries a per-slot position vector ``pos`` of shape (batch,)
+    — after a shared-prompt prefill all rows start equal, but decode may
+    advance them independently (the batched serve executor does).
+    """
     window = cfg.attention_window or max_len
     s_slots = min(window, max_len)
 
@@ -296,7 +302,7 @@ def _caches_to_decode_cache(caches, cfg: ModelConfig, seq: int, max_len: int):
                 "cache"),
         }
 
-    out: Dict[str, Any] = {"pos": jnp.asarray(seq, jnp.int32)}
+    out: Dict[str, Any] = {"pos": jnp.full((batch,), seq, jnp.int32)}
     if cfg.family == "hybrid":
         w = min(cfg.attention_window, max_len)
         layers = {}
@@ -337,7 +343,7 @@ def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
         return (jax.ShapeDtypeStruct(shape, dtype) if abstract
                 else jnp.zeros(shape, dtype))
 
-    cache: Dict[str, Any] = {"pos": arr((), jnp.int32)}
+    cache: Dict[str, Any] = {"pos": arr((batch,), jnp.int32)}
     if cfg.family == "hybrid":
         layers = {}
         for i in range(cfg.num_layers):
@@ -383,12 +389,152 @@ def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
     return cache
 
 
+# ---------------------------------------------------------------------------
+# Paged decode (block-table KV storage; see repro.kernels.paged_attention)
+# ---------------------------------------------------------------------------
+
+def paged_kv_shape(cfg: ModelConfig, n_pages: int, block_tokens: int):
+    """Page-pool tensor shape for one replica: every layer's KV lives in
+    one stacked pool so a single block table addresses all layers."""
+    return (cfg.num_layers, cfg.num_kv_heads, n_pages, block_tokens,
+            cfg.head_dim)
+
+
+def _full_stack_kv(cache, cfg: ModelConfig):
+    """(L, b, S, hkv, hd) stacked KV from a dense/moe decode cache.
+
+    Valid only for un-windowed caches (S == max_len), where ring_place is
+    the identity for seq <= S and slot index == absolute position.
+    """
+    parts_k, parts_v = [], []
+    for i in range(cfg.first_k_dense):
+        st = cache["dense_layers"][str(i)]
+        parts_k.append(st["k"][None])
+        parts_v.append(st["v"][None])
+    if "layers" in cache:                       # decode_unroll layout
+        for i in range(cfg.num_layers - cfg.first_k_dense):
+            st = cache["layers"][str(i)]
+            parts_k.append(st["k"][None])
+            parts_v.append(st["v"][None])
+    else:
+        parts_k.append(cache["blocks"]["k"])
+        parts_v.append(cache["blocks"]["v"])
+    return (jnp.concatenate(parts_k, 0) if len(parts_k) > 1 else parts_k[0],
+            jnp.concatenate(parts_v, 0) if len(parts_v) > 1 else parts_v[0])
+
+
+def scatter_prefill_pages(cache, cfg: ModelConfig, k_pages, v_pages,
+                          page_ids, offs):
+    """Scatter a batch-1 prefill cache into the paged KV pool.
+
+    ``page_ids``/``offs`` are (s,) int32 for absolute positions 0..s-1 —
+    position p goes to ``(page_ids[p], offs[p])`` per the block-table ABI.
+    Returns the updated (k_pages, v_pages), shape
+    ``paged_kv_shape(cfg, n_pages, block_tokens)``.
+    """
+    k_st, v_st = _full_stack_kv(cache, cfg)     # (L, 1, S, hkv, hd)
+    s = page_ids.shape[0]
+    kv_k = k_st[:, 0, :s].transpose(0, 2, 1, 3)  # (L, hkv, s, hd)
+    kv_v = v_st[:, 0, :s].transpose(0, 2, 1, 3)
+    k_pages = k_pages.at[:, :, page_ids, offs].set(kv_k.astype(k_pages.dtype))
+    v_pages = v_pages.at[:, :, page_ids, offs].set(kv_v.astype(v_pages.dtype))
+    return k_pages, v_pages
+
+
+def paged_decode_step(params, token, lengths, k_pages, v_pages, block_tables,
+                      cfg: ModelConfig, *, attn_impl: str = "auto",
+                      interpret: bool = False):
+    """One batched decode step over paged KV storage.
+
+    token: (b,) int32 (last sampled token per row); lengths: (b,) int32
+    valid positions per row *including* the token written this step
+    (the engine's ``append_token`` runs first), so the new KV is written
+    at absolute position ``lengths - 1`` and attention spans ``lengths``
+    positions.  ``lengths == 0`` marks an inactive batch row: its writes
+    land in whatever (null) page its all-null block-table row names, and
+    its logits are garbage the caller must mask.  Fixed shapes in, fixed
+    shapes out — admission/detach never recompiles.
+
+    Returns (logits (b, V), k_pages, v_pages).
+    """
+    from repro.kernels.paged_attention.ops import paged_attention_decode
+
+    b = token.shape[0]
+    btok = k_pages.shape[3]
+    write_pos = jnp.maximum(lengths - 1, 0)
+    page_ids = jnp.take_along_axis(
+        block_tables, (write_pos // btok)[:, None], axis=1)[:, 0]
+    offs = write_pos % btok
+    positions = write_pos[:, None].astype(jnp.int32)
+    window = cfg.attention_window or 0
+    use_rope = cfg.family != "encdec"
+
+    x = embed_tokens(token[:, None], params["embed"]["tok"], cfg.compute_dtype)
+
+    def attn_layer(h, bp, li, kp, vp):
+        """li: page-pool layer index (dense layers first, then blocks)."""
+        from repro.models.attention import merge_heads_out, project_qkv
+
+        h = shard_activation(h, "act")
+        hn = norm(h, bp, "ln1", cfg)
+        q, k, v = project_qkv(hn, bp["attn"], cfg, positions, use_rope)
+        kpi = jax.lax.dynamic_index_in_dim(kp, li, 0, keepdims=False)
+        vpi = jax.lax.dynamic_index_in_dim(vp, li, 0, keepdims=False)
+        # (b, 1, hkv, hd) -> (hkv, b, hd): row r writes (page_ids[r], offs[r])
+        kpi = kpi.at[:, page_ids, offs].set(
+            k[:, 0].transpose(1, 0, 2).astype(kpi.dtype))
+        vpi = vpi.at[:, page_ids, offs].set(
+            v[:, 0].transpose(1, 0, 2).astype(vpi.dtype))
+        kp = jax.lax.dynamic_update_index_in_dim(kp, kpi, li, 0)
+        vp = jax.lax.dynamic_update_index_in_dim(vp, vpi, li, 0)
+        o = paged_attention_decode(q[:, 0], kpi, vpi, block_tables, lengths,
+                                   window=window, impl=attn_impl,
+                                   interpret=interpret)
+        return h + merge_heads_out(o[:, None], bp["attn"]), kp, vp
+
+    for i in range(cfg.first_k_dense):
+        bp = params["dense_layers"][str(i)]
+        x, k_pages, v_pages = attn_layer(x, bp, jnp.asarray(i),
+                                         k_pages, v_pages)
+        hn = norm(x, bp, "ln2", cfg)
+        x = x + mlp(hn, bp["mlp"], cfg)
+
+    is_moe = cfg.num_experts > 0
+    n_layers = cfg.num_layers - cfg.first_k_dense
+    base = cfg.first_k_dense
+
+    def body(i, carry):
+        h, kp, vp = carry
+        bp = _tree_slice_dyn(params["blocks"], i)
+        h, kp, vp = attn_layer(h, bp, base + i, kp, vp)
+        hn = norm(h, bp, "ln2", cfg)
+        if is_moe:
+            ff, _ = moe_block(hn, bp["moe"], cfg)
+        else:
+            ff = mlp(hn, bp["mlp"], cfg)
+        return h + ff, kp, vp
+
+    if cfg.unroll_loops:
+        carry = (x, k_pages, v_pages)
+        for i in range(n_layers):
+            carry = body(jnp.asarray(i), carry)
+        x, k_pages, v_pages = carry
+    else:
+        x, k_pages, v_pages = jax.lax.fori_loop(
+            0, n_layers, body, (x, k_pages, v_pages))
+
+    x = norm(x, params, "final_norm", cfg)
+    logits = lm_logits(x[:, -1], params, cfg)
+    return logits, k_pages, v_pages
+
+
 def decode_step(params, token, cache, cfg: ModelConfig):
     """One decode step. token: (b,) int32. Returns (logits (b, V), cache)."""
     x = embed_tokens(token[:, None], params["embed"]["tok"], cfg.compute_dtype)
     if cfg.family == "hybrid":
         x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.compute_dtype)
-    pos = cache["pos"]
+    # pos: scalar (legacy shared position) or (b,) per-slot vector
+    pos = jnp.asarray(cache["pos"])
     new_cache: Dict[str, Any] = {"pos": pos + 1}
 
     if cfg.family == "hybrid":
@@ -475,6 +621,11 @@ def decode_step(params, token, cache, cfg: ModelConfig):
         slot = pos % s_slots
         n_valid = jnp.minimum(pos + 1, s_slots)
         n_layers = ks0.shape[0]
+        vec_pos = pos.ndim > 0
+        if vec_pos:
+            # (b, S, 1, 1) one-hot: row b writes at its own slot pos[b] % S
+            write_oh = (jnp.arange(s_slots)[None, :]
+                        == slot[:, None])[:, :, None, None]
 
         def body(i, carry):
             # fori_loop + in-place dynamic_update_slice keeps the (donated)
@@ -487,17 +638,30 @@ def decode_step(params, token, cache, cfg: ModelConfig):
             from repro.models.attention import (decode_attention,
                                                 merge_heads_out, project_qkv)
 
-            positions = jnp.full((b, 1), pos, jnp.int32)
+            positions = (pos[:, None].astype(jnp.int32) if vec_pos
+                         else jnp.full((b, 1), pos, jnp.int32))
             q, k, v = project_qkv(hn, bp["attn"], cfg, positions,
                                   use_rope=cfg.family != "encdec")
-            ks = jax.lax.dynamic_update_slice(
-                ks, k.astype(ks.dtype).reshape(1, b, 1, *k.shape[2:]),
-                (i, 0, slot, 0, 0))
-            vs = jax.lax.dynamic_update_slice(
-                vs, v.astype(vs.dtype).reshape(1, b, 1, *v.shape[2:]),
-                (i, 0, slot, 0, 0))
-            k_cache = jax.lax.dynamic_index_in_dim(ks, i, 0, keepdims=False)
-            v_cache = jax.lax.dynamic_index_in_dim(vs, i, 0, keepdims=False)
+            if vec_pos:
+                k_cache = jax.lax.dynamic_index_in_dim(ks, i, 0,
+                                                       keepdims=False)
+                v_cache = jax.lax.dynamic_index_in_dim(vs, i, 0,
+                                                       keepdims=False)
+                k_cache = jnp.where(write_oh, k.astype(ks.dtype), k_cache)
+                v_cache = jnp.where(write_oh, v.astype(vs.dtype), v_cache)
+                ks = jax.lax.dynamic_update_index_in_dim(ks, k_cache, i, 0)
+                vs = jax.lax.dynamic_update_index_in_dim(vs, v_cache, i, 0)
+            else:
+                ks = jax.lax.dynamic_update_slice(
+                    ks, k.astype(ks.dtype).reshape(1, b, 1, *k.shape[2:]),
+                    (i, 0, slot, 0, 0))
+                vs = jax.lax.dynamic_update_slice(
+                    vs, v.astype(vs.dtype).reshape(1, b, 1, *v.shape[2:]),
+                    (i, 0, slot, 0, 0))
+                k_cache = jax.lax.dynamic_index_in_dim(ks, i, 0,
+                                                       keepdims=False)
+                v_cache = jax.lax.dynamic_index_in_dim(vs, i, 0,
+                                                       keepdims=False)
             o = decode_attention(q, k_cache, v_cache, n_valid)
             h = h + merge_heads_out(o, bp["attn"])
             hn = norm(h, bp, "ln2", cfg)

@@ -60,26 +60,35 @@ class JaxSlotExecutor:
 
     def prefill(self, reqs: Sequence) -> Tuple[List[int], float]:
         t0 = self.clock()
-        toks = []
+        pend = []
         for r in reqs:
             logits, cache = self._prefill(self.params, self._batch1(r))
             tok = jnp.argmax(logits, -1).astype(jnp.int32)
             self._caches[r.rid] = cache
             self._tok[r.rid] = tok
-            toks.append(int(tok[0]))      # forces completion before timing
-        return toks, max(0.0, self.clock() - t0)
+            pend.append(tok)
+        # issue every slot's computation first, then ONE host sync before
+        # reading the clock — a per-slot int() would serialize N device
+        # round-trips into the measured cost
+        if pend:
+            jax.block_until_ready(pend)
+        cost = max(0.0, self.clock() - t0)
+        return [int(t[0]) for t in pend], cost
 
     def decode(self, reqs: Sequence) -> Tuple[List[int], float]:
         t0 = self.clock()
-        toks = []
+        pend = []
         for r in reqs:
             logits, cache = self._decode(self.params, self._tok[r.rid],
                                          self._caches[r.rid])
             tok = jnp.argmax(logits, -1).astype(jnp.int32)
             self._caches[r.rid] = cache
             self._tok[r.rid] = tok
-            toks.append(int(tok[0]))
-        return toks, max(0.0, self.clock() - t0)
+            pend.append(tok)
+        if pend:
+            jax.block_until_ready(pend)
+        cost = max(0.0, self.clock() - t0)
+        return [int(t[0]) for t in pend], cost
 
     def release(self, req) -> None:
         self._caches.pop(req.rid, None)

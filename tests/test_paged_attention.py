@@ -1,0 +1,127 @@
+"""Paged-attention decode kernel: equivalence against the pure-jnp gather
+reference AND the model's dense ``decode_attention``, across mixed
+lengths, GQA group sizes, and sliding windows; plus the block-size pin
+that keeps allocator pages equal to kernel kv tiles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    from tests._hypothesis_fallback import given, settings, st
+
+from repro.kernels.paged_attention.ops import (DEFAULT_BLOCK_TOKENS,
+                                               paged_attention_decode,
+                                               resolve_impl)
+from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.serve.kv_cache import FLASH_ATTENTION_BLOCK_K, PagedKVCache
+
+
+def _mk(seed, b, hq, hkv, d, n_pages, bt, nb, lengths):
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(ks[0], (b, hq, d), jnp.float32)
+    kp = jax.random.normal(ks[1], (hkv, n_pages, bt, d), jnp.float32)
+    vp = jax.random.normal(ks[2], (hkv, n_pages, bt, d), jnp.float32)
+    # distinct pages per row, shuffled so table order != page order
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n_pages)[: b * nb].reshape(b, nb)
+    bt_m = jnp.asarray(perm, jnp.int32)
+    lens = jnp.asarray(lengths, jnp.int32)
+    return q, kp, vp, bt_m, lens
+
+
+# ---------------------------------------------------------------------------
+# kernel == gather ref
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["kernel", "ref"])
+@pytest.mark.parametrize("b,hq,hkv,d,bt,nb,window", [
+    (4, 4, 2, 16, 8, 3, 0),      # GQA g=2, mixed lengths
+    (3, 6, 3, 32, 16, 2, 0),     # g=2, wider head
+    (2, 4, 4, 16, 8, 4, 0),      # MHA g=1
+    (4, 8, 2, 16, 8, 3, 6),      # sliding window inside one page
+    (3, 4, 1, 16, 8, 4, 20),     # window spanning pages, g=4
+])
+def test_paged_matches_ref(impl, b, hq, hkv, d, bt, nb, window):
+    n_pages = b * nb + 1
+    lengths = [(i * 7 + 3) % (nb * bt) + 1 for i in range(b)]
+    lengths[0] = nb * bt             # one full row
+    q, kp, vp, bt_m, lens = _mk(b + d, b, hq, hkv, d, n_pages, bt, nb,
+                                lengths)
+    out = paged_attention_decode(q, kp, vp, bt_m, lens, window=window,
+                                 impl=impl, interpret=True)
+    ref = paged_attention_ref(q, kp, vp, bt_m, lens, window=window)
+    np.testing.assert_allclose(out, ref, atol=3e-6)
+
+
+def test_inactive_rows_output_exact_zeros():
+    q, kp, vp, bt_m, lens = _mk(1, 4, 4, 2, 16, 13, 8, 3, [0, 5, 0, 17])
+    for impl in ("kernel", "ref"):
+        out = paged_attention_decode(q, kp, vp, bt_m, lens, impl=impl,
+                                     interpret=True)
+        assert np.all(np.asarray(out)[[0, 2]] == 0.0), impl
+        assert np.all(np.isfinite(np.asarray(out)))
+
+
+# ---------------------------------------------------------------------------
+# kernel == the model's dense decode_attention (the serve-path oracle)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["kernel", "ref"])
+def test_paged_matches_dense_decode_attention(impl):
+    from repro.models.attention import decode_attention
+
+    b, hq, hkv, d, bt, nb = 3, 4, 2, 16, 8, 3
+    lengths = [24, 9, 1]
+    q, kp, vp, bt_m, lens = _mk(5, b, hq, hkv, d, b * nb, bt, nb, lengths)
+    out = paged_attention_decode(q, kp, vp, bt_m, lens, impl=impl,
+                                 interpret=True)
+    # gather the pages back into the dense (b, S, hkv, d) cache layout:
+    # table order is position order per the block-table ABI
+    k_dense = np.asarray(kp)[:, np.asarray(bt_m)].transpose(1, 0, 2, 3, 4) \
+        .reshape(b, hkv, nb * bt, d).transpose(0, 2, 1, 3)
+    v_dense = np.asarray(vp)[:, np.asarray(bt_m)].transpose(1, 0, 2, 3, 4) \
+        .reshape(b, hkv, nb * bt, d).transpose(0, 2, 1, 3)
+    dense = decode_attention(q[:, None], jnp.asarray(k_dense),
+                             jnp.asarray(v_dense), lens)[:, 0]
+    np.testing.assert_allclose(out, dense, atol=3e-6)
+
+
+# ---------------------------------------------------------------------------
+# properties: mixed lengths x GQA x window, kernel == ref
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16), g=st.sampled_from([1, 2, 4]),
+       window=st.sampled_from([0, 5, 16]), bt=st.sampled_from([8, 16]))
+def test_paged_attention_property(seed, g, window, bt):
+    rng = np.random.default_rng(seed)
+    b, hkv, d, nb = 4, 2, 16, 2
+    hq = g * hkv
+    lengths = rng.integers(0, nb * bt + 1, b).tolist()
+    q, kp, vp, bt_m, lens = _mk(seed, b, hq, hkv, d, b * nb + 1, bt, nb,
+                                lengths)
+    out = paged_attention_decode(q, kp, vp, bt_m, lens, window=window,
+                                 impl="kernel", interpret=True)
+    ref = paged_attention_ref(q, kp, vp, bt_m, lens, window=window)
+    np.testing.assert_allclose(out, ref, atol=3e-6)
+
+
+# ---------------------------------------------------------------------------
+# pins
+# ---------------------------------------------------------------------------
+
+def test_kernel_kv_tile_pins_to_allocator_block_size():
+    """Allocator pages ARE kernel kv tiles: the three constants that make
+    block tables map 1:1 onto kernel grid iterations must stay equal."""
+    assert DEFAULT_BLOCK_TOKENS == FLASH_ATTENTION_BLOCK_K
+    assert PagedKVCache(1).block_tokens == DEFAULT_BLOCK_TOKENS
+
+
+def test_resolve_impl_off_tpu_is_ref():
+    assert resolve_impl("kernel") == "kernel"
+    assert resolve_impl("ref") == "ref"
+    if jax.default_backend() != "tpu":
+        assert resolve_impl("auto") == "ref"
